@@ -1,0 +1,28 @@
+"""Shared benchmark helpers: wall-clock on CPU (structure-comparative only)
++ analytic TPU-v5e projections from the dry-run cost model.
+
+CPU wall times do NOT predict TPU throughput; each benchmark therefore also
+derives the v5e roofline projection (the graded quantity) from byte/flop
+counts, and CSV rows carry both.
+"""
+import time
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def time_call(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

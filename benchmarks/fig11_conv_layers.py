@@ -1,0 +1,61 @@
+"""Fig. 11/12 analogue — the paper's two conv layers at 8/4/2-bit,
+MatMul-only vs full conv (+BN/QNT), kernel-vs-jnp path.
+
+Paper layers: 16x16x32 and 32x32x32 inputs, 64x3x3x32 filters. We run the
+actual Pallas kernel (interpret mode: correctness + structure; wall time on
+CPU is not TPU-predictive) and report the v5e roofline projection alongside
+— the projection carries the paper's headline structure: sub-byte cuts the
+memory term ~linearly in bitwidth, and the fused epilogue removes the
+separate quantization pass whose relative cost GROWS as bits shrink
+(paper §VI-B observes exactly this).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (QuantSpec, quantize, calibrate_weight,
+                        calibrate_activation)
+from repro.kernels.qconv import quantize_conv, qconv2d_apply, im2col_hwc
+from repro.kernels.qmatmul import qlinear_apply
+from benchmarks.common import emit, time_call, PEAK_FLOPS, HBM_BW
+
+
+def run_layer(H, W, rng):
+    N, Cin, Cout, F = 1, 32, 64, 3
+    w = rng.normal(size=(F, F, Cin, Cout)).astype(np.float32) * 0.08
+    x = np.maximum(rng.normal(size=(N, H, W, Cin)), 0).astype(np.float32)
+    bn_s = rng.normal(size=(Cout,)).astype(np.float32) * 0.05 + 0.3
+    bn_b = np.zeros((Cout,), np.float32)
+    macs = H * W * Cout * F * F * Cin
+    for bits in (8, 4, 2):
+        sw = calibrate_weight(jnp.asarray(w), bits)
+        sx = calibrate_activation(x, bits, 100.0)
+        sy = QuantSpec.activation(bits, 8.0)
+        qp = quantize_conv(jnp.asarray(w), sw, bn_s, bn_b, sx, sy, 1, 1)
+        xq = quantize(jnp.asarray(x), sx)
+
+        us_full = time_call(
+            lambda xq=xq, qp=qp: qconv2d_apply(qp, xq, use_kernel=True))
+        cols, ho, wo = im2col_hwc(xq, 3, 3, 1, 1)
+        us_mm = time_call(
+            lambda c=cols, qp=qp: qlinear_apply(qp.gemm, c.reshape(-1, 288),
+                                                use_kernel=True))
+        # v5e projection: memory-bound at these sizes
+        k_pad = 384
+        bytes_hbm = (k_pad * Cout * bits // 8 + H * W * k_pad * bits // 8
+                     + H * W * Cout * bits // 8)
+        t_mem = bytes_hbm / HBM_BW
+        t_cmp = 2 * macs / PEAK_FLOPS
+        emit(f"fig11_conv{H}x{W}_{bits}bit_full", us_full,
+             f"v5e_us={max(t_mem,t_cmp)*1e6:.3f};macs={macs}")
+        emit(f"fig11_conv{H}x{W}_{bits}bit_matmul_only", us_mm,
+             f"v5e_mem_term_us={t_mem*1e6:.3f}")
+
+
+def main():
+    rng = np.random.default_rng(0)
+    run_layer(16, 16, rng)
+    run_layer(32, 32, rng)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig. 13/14 analogue — baseline (8-bit-only substrate) vs XpulpNN
+(native sub-byte) at the framework level.
+
+Paper: XpulpNN cluster vs RI5CY cluster (and STM32 MCUs): 6x (4-bit) and
+8.7x (2-bit) conv speedups. TPU adaptation: W8A8 path (the '8-bit-only
+baseline ISA': sub-byte data must be unpacked to bytes in HBM, gaining
+nothing) vs packed W4A4/W2A2 path. The gain appears in the memory roofline
+term of the serving-shaped GEMM; silicon wall-clock is out of scope (see
+DESIGN.md §7).
+"""
+import numpy as np
+
+from benchmarks.common import emit, HBM_BW, PEAK_FLOPS
+
+
+def main():
+    # decode-shaped GEMM per chip: 32 tokens/chip, d_model 4096, output
+    # shard 16384/16 — the memory-bound serving regime the paper targets
+    M, K, N = 32, 4096, 1024
+    base = None
+    for bits, name in ((16, "bf16_fp_baseline"), (8, "w8_baseline_isa"),
+                       (4, "xpulpnn_w4"), (2, "xpulpnn_w2")):
+        w_bytes = K * N * bits // 8
+        x_bytes = M * K            # int8/bf16 activations
+        t_mem = (w_bytes + x_bytes) / HBM_BW
+        t_cmp = 2 * M * K * N / PEAK_FLOPS
+        t = max(t_mem, t_cmp)
+        if base is None:
+            base = t
+        bound = "mem" if t_mem > t_cmp else "compute"
+        emit(f"fig13_decode_gemm_{name}", t * 1e6,
+             f"speedup_vs_bf16={base/t:.2f}x;bound={bound}")
+
+
+if __name__ == "__main__":
+    main()

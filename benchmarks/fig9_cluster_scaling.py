@@ -1,0 +1,27 @@
+"""Fig. 9 analogue — multicore (mesh) scaling of the MatMul.
+
+Paper: MAC/cycle efficiency of the 8-core cluster vs single core (and the
+TCDM banking-factor effect). TPU adaptation: per-device FLOPs and bytes of
+the packed GEMM sharded over 1..16 'model' shards (weights stationary,
+activations replicated) — near-linear scaling == per-device work ~ 1/n with
+bounded collective bytes. Derived from analytic partitioning of the same
+GEMM the dry-run exercises.
+"""
+from benchmarks.common import emit, PEAK_FLOPS, HBM_BW
+
+
+def main():
+    M, K, N = 256, 4608, 256
+    for bits in (8, 4, 2):
+        for n_dev in (1, 2, 4, 8, 16):
+            flops = 2 * M * K * N / n_dev
+            w_bytes = K * N * bits // 8 // n_dev   # weight-stationary
+            x_bytes = M * K * bits // 8            # activations replicated
+            psum = 0 if n_dev == 1 else M * N * 4  # partial-sum reduce
+            t = max(flops / PEAK_FLOPS, (w_bytes + x_bytes) / HBM_BW)
+            emit(f"fig9_{bits}bit_dev{n_dev}", t * 1e6,
+                 f"per_dev_flops={flops:.2e};coll_bytes={psum}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from benchmarks import (fig8_macs_per_issue, fig9_cluster_scaling,
+                        fig11_conv_layers, fig13_sota_comparison,
+                        table1_envelope)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig8_macs_per_issue.main()
+    fig9_cluster_scaling.main()
+    fig11_conv_layers.main()
+    fig13_sota_comparison.main()
+    table1_envelope.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table I analogue — throughput/efficiency envelope of this framework on
+v5e for the paper-shaped workloads (GOP/s per chip at the roofline bound).
+"""
+from benchmarks.common import emit, HBM_BW, PEAK_FLOPS
+
+
+def main():
+    # two operating points like Table I: compute-bound (the paper conv
+    # layer: quantization does NOT speed up compute-bound work on an
+    # int8-fixed MXU — an honest difference from the issue-bound MCU) and
+    # memory-bound (per-chip decode GEMM: sub-byte pays off fully)
+    for regime, (M, K, N) in (("conv_computebound", (256, 4608, 256)),
+                              ("decode_membound", (32, 4096, 1024))):
+        ops = 2 * M * K * N
+        for bits in (8, 4, 2):
+            b = (K * N + M * K) * bits // 8 + M * N
+            t = max(ops / PEAK_FLOPS, b / HBM_BW)
+            emit(f"table1_{regime}_{bits}bit", t * 1e6,
+                 f"gops_per_chip={ops/t/1e9:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro.core — the paper's contribution: sub-byte integer-image QNN algebra,
+chunk-planar packing, and the quantized-linear deployment artifact."""
+
+from repro.core.packing import (CHUNK, pack, unpack, unpack_planes,
+                                pack_factor, int_range, pad_to_chunk,
+                                padded_size, planar_perm)
+from repro.core.quantize import (QuantSpec, QuantizedLinearParams,
+                                 quantize, dequantize, fake_quantize,
+                                 lin, batchnorm_int, qnt_act,
+                                 requantize_shift, requantize_shift_i64,
+                                 fold_bn_requant, quantize_linear,
+                                 M_BITS, D_MIN, D_MAX)
+from repro.core.calibration import (calibrate_weight, calibrate_activation,
+                                    RunningCalibrator)

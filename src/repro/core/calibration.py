@@ -1,0 +1,57 @@
+"""Post-training-quantization range calibration -> QuantSpec.
+
+The paper consumes already-quantized networks (from QAT or PTQ flows, refs
+[12],[20],[45]); the framework needs its own calibrator so examples are
+end-to-end. Two estimators: absolute min/max and percentile (robust to
+outliers, the practical default for activations).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import QuantSpec
+
+
+def calibrate_weight(w, bits: int) -> QuantSpec:
+    absmax = float(jnp.max(jnp.abs(w)))
+    absmax = max(absmax, 1e-8)
+    return QuantSpec.weight(bits, absmax)
+
+
+def calibrate_activation(samples, bits: int, percentile: float = 99.9,
+                         ) -> QuantSpec:
+    """Unsigned activation spec (alpha=0 per paper): beta from percentile."""
+    x = np.asarray(samples, dtype=np.float32).reshape(-1)
+    x = np.maximum(x, 0.0)  # activation grids start at 0 (ReLU semantic)
+    if percentile >= 100.0:
+        beta = float(x.max())
+    else:
+        beta = float(np.percentile(x, percentile))
+    beta = max(beta, 1e-8)
+    return QuantSpec.activation(bits, beta)
+
+
+class RunningCalibrator:
+    """Streaming min/max + moving-percentile calibrator for activation taps."""
+
+    def __init__(self, bits: int, momentum: float = 0.9,
+                 percentile: float = 99.9):
+        self.bits = bits
+        self.momentum = momentum
+        self.percentile = percentile
+        self._beta = None
+
+    def observe(self, x) -> None:
+        x = np.asarray(x, dtype=np.float32).reshape(-1)
+        x = np.maximum(x, 0.0)
+        b = float(np.percentile(x, self.percentile)) if x.size else 0.0
+        if self._beta is None:
+            self._beta = b
+        else:
+            self._beta = self.momentum * self._beta + (1 - self.momentum) * b
+
+    def spec(self) -> QuantSpec:
+        if self._beta is None:
+            raise ValueError("no observations")
+        return QuantSpec.activation(self.bits, max(self._beta, 1e-8))

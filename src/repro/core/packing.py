@@ -1,0 +1,165 @@
+"""Sub-byte pack/unpack — the storage layer of the XpulpNN reproduction.
+
+The paper's `nibble` (4-bit) and `crumb` (2-bit) SIMD operands live packed in
+32-bit registers; on TPU we store them packed in int8 *containers* in HBM and
+unpack inside the Pallas kernel (VREG-level shifts), mirroring the paper's
+"no unpack overhead when the ISA supports it natively" argument: unpacking
+costs shift+mask ALU work overlapped with the MXU, not extra memory traffic.
+
+Layout: **chunk-planar packing** along the reduction (K) axis.  Within each
+chunk of ``CHUNK = 128`` logical elements, the packed byte ``j`` of the chunk
+holds logical elements ``j, j+64`` (4-bit) or ``j, j+32, j+64, j+96`` (2-bit)
+in its low→high bit-fields.  Planar layout means the kernel unpacks a packed
+tile into ``pack_factor`` *contiguous* sub-tiles (cheap static slices — no
+lane interleave), and because integer accumulation is order-invariant the
+matmul can consume the sub-tiles in planar order as long as the *other*
+operand is sliced with the same chunk-planar order.  This is the TPU analogue
+of Marlin-style permuted weight packing.
+
+All functions are pure jnp and usable both on host (packing checkpoints) and
+inside kernels (unpacking blocks).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Logical elements per packing chunk. The packed chunk is CHUNK // pack_factor
+# containers: 64 bytes for 4-bit, 32 bytes for 2-bit — both sublane-aligned
+# for int8 TPU tiles. K dims must be padded to a multiple of CHUNK.
+CHUNK = 128
+
+# NOTE: unsigned 8-bit caps at 127, not 255 — containers are int8 and
+# XLA's dot_general has no mixed-signedness mode (unlike pv.sdotusp on the
+# paper's ISA), so byte activations sacrifice 1 bit of range. The paper's
+# focus (nibble/crumb) is unaffected. See DESIGN.md assumption changes.
+_INT_INFO = {
+    8: (-128, 127, 0, 127),
+    4: (-8, 7, 0, 15),
+    2: (-2, 1, 0, 3),
+}
+
+
+def pack_factor(bits: int) -> int:
+    if bits not in (8, 4, 2):
+        raise ValueError(f"unsupported bitwidth {bits}")
+    return 8 // bits
+
+
+def int_range(bits: int, signed: bool) -> tuple[int, int]:
+    lo_s, hi_s, lo_u, hi_u = _INT_INFO[bits]
+    return (lo_s, hi_s) if signed else (lo_u, hi_u)
+
+
+def _check_last_axis(x, bits):
+    if x.shape[-1] % CHUNK != 0:
+        raise ValueError(
+            f"packing axis ({x.shape[-1]}) must be a multiple of CHUNK={CHUNK}"
+        )
+
+
+def pack(x, bits: int, axis: int = -1):
+    """Pack sub-byte integer values (stored as int8) into int8 containers.
+
+    ``x`` values must already be in the signed/unsigned range of ``bits``
+    (packing only keeps the low ``bits`` bits, so signed and unsigned share
+    one packer).  Packing is chunk-planar along ``axis``.
+    """
+    if bits == 8:
+        return x.astype(jnp.int8)
+    pf = pack_factor(bits)
+    x = jnp.moveaxis(x, axis, -1)
+    _check_last_axis(x, bits)
+    *lead, k = x.shape
+    sub = CHUNK // pf  # packed bytes per chunk
+    # (..., n_chunks, pf, sub): plane p holds logical j = p*sub + j_in_plane
+    planes = x.reshape(*lead, k // CHUNK, pf, sub).astype(jnp.int32)
+    mask = (1 << bits) - 1
+    out = jnp.zeros((*lead, k // CHUNK, sub), dtype=jnp.int32)
+    for p in range(pf):
+        out = out | ((planes[..., p, :] & mask) << (bits * p))
+    out = out.reshape(*lead, k // pf).astype(jnp.int8)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def unpack(p, bits: int, signed: bool, axis: int = -1):
+    """Inverse of :func:`pack`; returns int8 values in the sub-byte range."""
+    if bits == 8:
+        return p.astype(jnp.int8)
+    pf = pack_factor(bits)
+    p = jnp.moveaxis(p, axis, -1)
+    *lead, kp = p.shape
+    sub = CHUNK // pf
+    if kp % sub != 0:
+        raise ValueError(f"packed axis ({kp}) not a multiple of {sub}")
+    chunks = p.reshape(*lead, kp // sub, sub)
+    planes = []
+    for pl in range(pf):
+        planes.append(_extract_field(chunks, bits, pl, signed))
+    out = jnp.stack(planes, axis=-2)  # (..., n_chunks, pf, sub)
+    out = out.reshape(*lead, kp * pf)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def _extract_field(container, bits: int, plane: int, signed: bool):
+    """Extract bit-field ``plane`` from int8 containers, with sign/zero ext.
+
+    Works on int8 arrays with int8 ops only — safe inside Pallas kernels.
+    """
+    c = container.astype(jnp.int8)
+    shift = bits * plane
+    if signed:
+        # left-align the field then arithmetic-shift right to sign-extend
+        left = 8 - bits - shift
+        return ((c << left) >> (8 - bits)).astype(jnp.int8)
+    mask = (1 << bits) - 1
+    return ((c >> shift) & mask).astype(jnp.int8)
+
+
+def unpack_planes(p_block, bits: int, signed: bool):
+    """Kernel-side unpack: split a packed block into ``pf`` planar sub-blocks.
+
+    ``p_block`` has its *packed* K dim as the leading axis and must cover a
+    whole number of chunks.  Returns a list of ``pf`` arrays, each with
+    leading dim ``p_block.shape[0]`` (one plane), such that plane ``p`` holds
+    logical elements ``chunk*CHUNK + p*sub + j``.  Consuming the planes in
+    order with the matching planar slices of the other operand reproduces the
+    exact integer matmul (accumulation order is irrelevant for ints).
+    """
+    if bits == 8:
+        return [p_block.astype(jnp.int8)]
+    pf = pack_factor(bits)
+    return [_extract_field(p_block, bits, pl, signed) for pl in range(pf)]
+
+
+def planar_perm(k: int, bits: int) -> np.ndarray:
+    """Permutation mapping *planar order* position -> logical K index.
+
+    After unpacking with :func:`unpack_planes`, concatenating the planes of
+    every chunk yields elements in planar order: for chunk c and plane p the
+    run ``c*CHUNK + p*sub + [0..sub)``. The *other* (unpacked) matmul operand
+    must be gathered with this permutation so both sides agree. When both
+    operands are packed with the same chunk-planar scheme no permutation is
+    needed anywhere — planes pair up one-to-one.
+    """
+    if bits == 8:
+        return np.arange(k)
+    pf = pack_factor(bits)
+    sub = CHUNK // pf
+    idx = np.arange(k).reshape(k // CHUNK, pf, sub)
+    return idx.reshape(-1)
+
+
+def pad_to_chunk(x, axis: int = -1, value: int = 0):
+    """Pad ``axis`` up to a CHUNK multiple (zero padding == zero MACs)."""
+    size = x.shape[axis]
+    pad = (-size) % CHUNK
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def padded_size(k: int) -> int:
+    return k + ((-k) % CHUNK)

@@ -1,0 +1,224 @@
+"""Integer-image quantization algebra — paper §III-A, eqs. (1)-(4), bit-exact.
+
+Every QNN tensor t has a real range [alpha, beta) discretized on 2^N levels:
+
+    t = alpha + eps * t_hat,      eps = (beta - alpha) / (2^N - 1)      (1)
+
+with alpha_x = alpha_y = 0 for activations/outputs (so activation integer
+images are unsigned). The three QNN operators act on integer images:
+
+    LIN:      phi_hat   = sum_n w_hat[m,n] * x_hat[n]        (int32 accum) (2)
+    BN:       phi'_hat  = kappa_hat * phi_hat + lambda_hat   (int32)       (3)
+    QNT/ACT:  y_hat     = clip((m * phi'_hat) >> d, 0, 2^N-1)              (4)
+              m = round(eps_phi' * 2^d / eps_y)
+
+The requantization product m * phi' needs ~47 bits; the paper's RISC-V core
+computes it with 32-bit ops. We reproduce (4) **exactly in int32** with a
+high/low split valid for d >= 16 (see :func:`requantize_shift`); calibration
+always produces d >= 16 because eps_phi'/eps_y << 1 in any sane QNN. The same
+helper is used inside the Pallas kernel epilogue, so kernel and pure-jnp
+paths are bit-identical; tests/hypothesis cross-check against a numpy int64
+oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+M_BITS = 15  # requant multiplier m in [0, 2^15): keeps every split term in int32
+D_MIN, D_MAX = 16, 31
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Affine quantization grid for one tensor (eq. 1)."""
+
+    bits: int
+    signed: bool
+    alpha: float  # range lower bound (0 for activations, per paper)
+    beta: float
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+    @property
+    def eps(self) -> float:
+        if self.signed:
+            # symmetric grid: t = eps * t_hat, t_hat in [-int_max, int_max]
+            # (most-negative code dropped; 2-bit signed => ternary {-1,0,1})
+            return self.beta / self.int_max
+        # unsigned: grid covers [alpha, beta] with int_max steps (int_max is
+        # container-capped at 127 for 8-bit, see packing._INT_INFO)
+        return (self.beta - self.alpha) / self.int_max
+
+    @property
+    def int_min(self) -> int:
+        if self.signed:
+            return -self.int_max  # symmetric
+        return packing.int_range(self.bits, self.signed)[0]
+
+    @property
+    def int_max(self) -> int:
+        return packing.int_range(self.bits, self.signed)[1]
+
+    @staticmethod
+    def activation(bits: int, beta: float) -> "QuantSpec":
+        return QuantSpec(bits=bits, signed=False, alpha=0.0, beta=beta)
+
+    @staticmethod
+    def weight(bits: int, absmax: float) -> "QuantSpec":
+        # symmetric signed grid for weights (paper's kernels are symmetric)
+        return QuantSpec(bits=bits, signed=True, alpha=-absmax, beta=absmax)
+
+
+def quantize(t, spec: QuantSpec):
+    """Real tensor -> integer image (int8 container), eq. (1) inverted."""
+    zero = 0.0 if spec.signed else spec.alpha
+    t_hat = jnp.round((t - zero) / spec.eps)
+    t_hat = jnp.clip(t_hat, spec.int_min, spec.int_max)
+    return t_hat.astype(jnp.int8)
+
+
+def dequantize(t_hat, spec: QuantSpec):
+    zero = 0.0 if spec.signed else spec.alpha
+    return zero + spec.eps * t_hat.astype(jnp.float32)
+
+
+def fake_quantize(t, spec: QuantSpec):
+    """Quantize-dequantize with straight-through estimator (QAT forward).
+
+    Gradient is identity inside the representable range, zero outside
+    (PACT-style clipped STE)."""
+    import jax
+
+    q = dequantize(quantize(t, spec), spec)
+    lo = spec.alpha + spec.eps * spec.int_min if spec.signed else spec.alpha
+    hi = spec.alpha + spec.eps * spec.int_max
+    t_clip = jnp.clip(t, lo, hi)
+    return t_clip + jax.lax.stop_gradient(q - t_clip)
+
+
+def lin(w_hat, x_hat):
+    """Eq. (2): integer dot product with int32 accumulation."""
+    return jnp.matmul(
+        x_hat.astype(jnp.int8), w_hat.astype(jnp.int8),
+        preferred_element_type=jnp.int32)
+
+
+def batchnorm_int(phi, kappa, lam):
+    """Eq. (3): per-output-channel integer batch-norm (int32 wraparound
+    semantics, matching 32-bit RISC-V MAC)."""
+    return phi * kappa.astype(jnp.int32) + lam.astype(jnp.int32)
+
+
+def requantize_shift(phi, m, d):
+    """Exact ``(m * phi) >> d`` (floor) in pure int32, for d in [16, 31].
+
+    Split the 47-bit product: with hi = phi >> 16, lo = phi & 0xFFFF,
+        m*phi = A * 2^16 + B,   A = m*hi + ((m*lo) >> 16),  B = (m*lo) & 0xFFFF
+    and for s = d - 16 >= 0:  floor(m*phi / 2^d) = A >> s  exactly, because
+    the discarded ``r*2^16 + B`` remainder is < 2^(s+16). Every intermediate
+    fits int32 given m < 2^15. Used verbatim in the Pallas kernel epilogue.
+    """
+    phi = phi.astype(jnp.int32)
+    m = m.astype(jnp.int32)
+    hi = phi >> 16
+    lo = phi & 0xFFFF
+    mlo = m * lo
+    a = m * hi + (mlo >> 16)
+    return a >> (d - 16)
+
+
+def requantize_shift_i64(phi, m, d):
+    """numpy int64 oracle for :func:`requantize_shift` (tests only)."""
+    phi = np.asarray(phi, dtype=np.int64)
+    m = np.asarray(m, dtype=np.int64)
+    return ((m * phi) >> d).astype(np.int64)
+
+
+def qnt_act(phi_prime, m, d, out_bits: int):
+    """Eq. (4): requantize + clip to the unsigned N-bit activation grid.
+
+    The clip-at-zero implements the ReLU-style activation semantic the paper
+    folds into QNT/ACT (alpha_y = 0).
+    """
+    y = requantize_shift(phi_prime, m, d)
+    hi = packing.int_range(out_bits, False)[1]
+    return jnp.clip(y, 0, hi).astype(jnp.int8)
+
+
+def fold_bn_requant(eps_w: float, eps_x: float, eps_y: float,
+                    bn_scale, bn_bias,
+                    bits_out: int,
+                    kappa_bits: int = 8):
+    """Calibrate integer BN + QNT/ACT parameters from real-valued BN.
+
+    Real pipeline:  y = clip((bn_scale * phi_real + bn_bias) / eps_y)
+    with phi_real = eps_w*eps_x*phi_hat. We pick the accumulator quantum
+    eps_phi' and integer kappa_hat (kappa_bits) per channel, lambda_hat int32,
+    and (m, d) with m < 2^15, d in [16, 31], maximizing precision.
+
+    Returns (kappa_hat i32[n], lambda_hat i32[n], m i32[n], d int scalar).
+    """
+    bn_scale = np.asarray(bn_scale, dtype=np.float64)
+    bn_bias = np.asarray(bn_bias, dtype=np.float64)
+    eps_phi = float(eps_w) * float(eps_x)
+
+    # kappa_hat = round(bn_scale / eps_kappa); choose per-layer eps_kappa so
+    # the largest channel scale uses the full kappa_bits range.
+    kmax = max(np.abs(bn_scale).max(), 1e-12)
+    eps_kappa = kmax / ((1 << (kappa_bits - 1)) - 1)
+    kappa_hat = np.round(bn_scale / eps_kappa).astype(np.int32)
+    eps_phi_p = eps_phi * eps_kappa
+    lambda_hat = np.round(bn_bias / eps_phi_p).astype(np.int32)
+
+    ratio = eps_phi_p / float(eps_y)
+    if ratio <= 0:
+        raise ValueError("invalid quanta")
+    # largest d in [D_MIN, D_MAX] with m = round(ratio * 2^d) < 2^M_BITS
+    d = min(D_MAX, int(np.floor(np.log2((1 << M_BITS) - 1) - np.log2(ratio))))
+    if d < D_MIN:
+        raise ValueError(
+            f"requant ratio {ratio} too large for int32 requant (d={d} < 16); "
+            "re-calibrate output quantum")
+    m = np.round(ratio * (1 << d)).astype(np.int32)
+    m = np.broadcast_to(m, bn_scale.shape).copy()
+    return (jnp.asarray(kappa_hat), jnp.asarray(lambda_hat),
+            jnp.asarray(m), d)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedLinearParams:
+    """Everything the integer GEMM needs — the deployable artifact."""
+
+    w_packed: jnp.ndarray  # (K_pad/pf, N) int8 containers, chunk-planar
+    w_bits: int
+    a_bits: int
+    a_signed: bool
+    kappa: jnp.ndarray     # (N,) int32
+    lam: jnp.ndarray       # (N,) int32
+    m: jnp.ndarray         # (N,) int32
+    d: int
+    out_bits: int
+    k_logical: int         # pre-padding K
+
+
+def quantize_linear(w, spec_w: QuantSpec, bn_scale, bn_bias,
+                    spec_x: QuantSpec, spec_y: QuantSpec) -> QuantizedLinearParams:
+    """Full deployment quantization of one linear layer (paper's pipeline)."""
+    w_hat = quantize(w, spec_w)                       # (K, N) int8
+    k_logical = w_hat.shape[0]
+    w_hat = packing.pad_to_chunk(w_hat, axis=0)
+    w_packed = packing.pack(w_hat, spec_w.bits, axis=0)
+    kappa, lam, m, d = fold_bn_requant(
+        spec_w.eps, spec_x.eps, spec_y.eps, bn_scale, bn_bias, spec_y.bits)
+    return QuantizedLinearParams(
+        w_packed=w_packed, w_bits=spec_w.bits, a_bits=spec_x.bits,
+        a_signed=spec_x.signed, kappa=kappa, lam=lam, m=m, d=d,
+        out_bits=spec_y.bits, k_logical=k_logical)

@@ -1,0 +1,61 @@
+"""Deterministic synthetic token pipeline with sharded host placement.
+
+Real deployments swap `SyntheticLM` for a tokenized corpus reader; the
+contract the trainer relies on is: deterministic per (seed, step) batches
+(replayable after restart — data order survives checkpoint/restore without
+persisting reader state), and device placement via the provided sharding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+class SyntheticLM:
+    """Zipf-ish token stream with next-token labels; per-step determinism.
+
+    A light markov flavour (token depends on previous) gives the training
+    loss a learnable structure so examples show a real loss curve.
+    """
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
+                 sharding=None, src_dim: int = 0, src_len: int = 0):
+        self.vocab = vocab
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.sharding = sharding
+        self.src_dim = src_dim
+        self.src_len = src_len
+        self._step = 0
+
+    def _batch_at(self, step: int):
+        rng = np.random.default_rng((self.seed, step))
+        # zipf-distributed tokens, clipped to vocab
+        z = rng.zipf(1.3, size=(self.batch, self.seq + 1))
+        toks = np.minimum(z, self.vocab - 1).astype(np.int32)
+        # markov structure: even positions copy previous token ± 1
+        toks[:, 1::2] = np.minimum(
+            toks[:, 0:-1:2] + (rng.integers(0, 2, toks[:, 1::2].shape)),
+            self.vocab - 1)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.src_dim:
+            batch["src_embed"] = rng.standard_normal(
+                (self.batch, self.src_len, self.src_dim)).astype(np.float16) \
+                * 0.05
+        return batch
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        batch = self._batch_at(self._step)
+        self._step += 1
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding[k])
+                     for k, v in batch.items()}
+        return batch
+
+    def seek(self, step: int) -> None:
+        self._step = step

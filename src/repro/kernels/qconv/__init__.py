@@ -1,0 +1,3 @@
+from repro.kernels.qconv.ops import (im2col_hwc, quantize_conv,
+                                     qconv2d_apply, QuantizedConvParams)
+from repro.kernels.qconv.ref import qconv2d_ref

@@ -1,0 +1,82 @@
+"""Quantized HWC convolution = im2col + packed sub-byte GEMM (paper §III-C).
+
+PULP-NN's execution model is reproduced structurally: an im2col transform
+arranges each output pixel's receptive field (F*F*Cin contiguous, HWC
+layout) into a GEMM row, then the MatMul + BN + QNT/ACT pipeline runs as one
+fused kernel (repro.kernels.qmatmul). On TPU the im2col is pure data
+movement the XLA compiler folds into the surrounding program; the compute
+hot-spot is the packed GEMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.quantize import (QuantSpec, QuantizedLinearParams,
+                                 fold_bn_requant, quantize)
+from repro.kernels.qmatmul import qlinear_apply
+
+
+def im2col_hwc(x, fh: int, fw: int, stride: int = 1, padding: int = 0):
+    """(N, H, W, C) -> (N, Ho, Wo, fh*fw*C); receptive field flattened in
+    (dy, dx, c) order, matching the paper's HWC im2col buffer."""
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding),
+                        (0, 0)))
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w + 2 * padding - fw) // stride + 1
+    cols = []
+    for dy in range(fh):
+        for dx in range(fw):
+            sl = x[:, dy:dy + stride * ho:stride, dx:dx + stride * wo:stride]
+            cols.append(sl)
+    return jnp.concatenate(cols, axis=-1), ho, wo
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedConvParams:
+    """Deployable artifact for one quantized conv layer."""
+
+    gemm: QuantizedLinearParams   # packed (fh*fw*cin -> cout) GEMM
+    fh: int
+    fw: int
+    stride: int
+    padding: int
+    cin: int
+    cout: int
+
+
+def quantize_conv(w, spec_w: QuantSpec, bn_scale, bn_bias,
+                  spec_x: QuantSpec, spec_y: QuantSpec,
+                  stride: int = 1, padding: int = 1) -> QuantizedConvParams:
+    """w: (fh, fw, cin, cout) real weights -> packed integer artifact."""
+    fh, fw, cin, cout = w.shape
+    w_hat = quantize(w.reshape(fh * fw * cin, cout), spec_w)
+    k_logical = w_hat.shape[0]
+    w_hat = packing.pad_to_chunk(w_hat, axis=0)
+    w_packed = packing.pack(w_hat, spec_w.bits, axis=0)
+    kappa, lam, m, d = fold_bn_requant(
+        spec_w.eps, spec_x.eps, spec_y.eps, bn_scale, bn_bias, spec_y.bits)
+    gemm = QuantizedLinearParams(
+        w_packed=w_packed, w_bits=spec_w.bits, a_bits=spec_x.bits,
+        a_signed=spec_x.signed, kappa=kappa, lam=lam, m=m, d=d,
+        out_bits=spec_y.bits, k_logical=k_logical)
+    return QuantizedConvParams(gemm=gemm, fh=fh, fw=fw, stride=stride,
+                               padding=padding, cin=cin, cout=cout)
+
+
+def qconv2d_apply(params: QuantizedConvParams, x_hat, *,
+                  use_kernel: bool = True, interpret: bool = True,
+                  block: Optional[tuple] = None):
+    """x_hat: (N, H, W, Cin) int8 integer images -> (N, Ho, Wo, Cout) int8."""
+    cols, ho, wo = im2col_hwc(x_hat, params.fh, params.fw, params.stride,
+                              params.padding)
+    y = qlinear_apply(params.gemm, cols, use_kernel=use_kernel,
+                      interpret=interpret, block=block)
+    return y.reshape(x_hat.shape[0], ho, wo, params.cout)

@@ -1,0 +1,106 @@
+"""jit'd public wrapper around the packed sub-byte GEMM kernel.
+
+Handles leading-batch flattening, K padding to packing.CHUNK, M/N padding to
+block multiples, activation quantize+pack on the way in, and exposes the
+three epilogues. `use_kernel=False` falls back to a pure-jnp path with
+identical integer semantics (used on the 512-device dry-run meshes where the
+interpret-mode kernel would be prohibitively slow to trace per device, and
+as the XLA-native production path: the packed GEMM then lowers to XLA
+convert+dot which the TPU compiler fuses).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quantize import (QuantizedLinearParams, batchnorm_int,
+                                 qnt_act, requantize_shift)
+from repro.kernels.qmatmul.kernel import qmatmul_packed
+
+
+def _flatten_lead(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _pad_axis(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qmatmul_jnp(x_packed, w_packed, kappa, lam, m_mul, *,
+                a_bits, a_signed, w_bits, d, out_bits,
+                epilogue="int", scale=1.0):
+    """Pure-jnp path, bit-identical to the kernel (shares requant helper)."""
+    x = packing.unpack(x_packed, a_bits, a_signed, axis=-1)
+    w = packing.unpack(w_packed, w_bits, True, axis=0)
+    acc = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    if epilogue == "raw":
+        return acc
+    if epilogue == "dequant":
+        return (acc.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+    phi_p = batchnorm_int(acc, kappa, lam)
+    return qnt_act(phi_p, m_mul, d, out_bits)
+
+
+def qlinear_apply(params: QuantizedLinearParams, x_hat, *,
+                  epilogue: str = "int", scale: float = 1.0,
+                  use_kernel: bool = True, block: Optional[tuple] = None,
+                  interpret: bool = True):
+    """Apply a quantized linear layer to integer-image activations.
+
+    x_hat: (..., K_logical) int8 integer images (unpacked). They are padded
+    to CHUNK and packed on the fly when a_bits < 8 (in a fused chain the
+    previous layer's epilogue already emits packed activations and
+    `qlinear_apply_packed` skips this step).
+    """
+    x2, lead = _flatten_lead(x_hat)
+    x2 = packing.pad_to_chunk(x2, axis=-1)
+    xp = packing.pack(x2, params.a_bits, axis=-1)
+    out = qlinear_apply_packed(
+        params, xp, epilogue=epilogue, scale=scale, use_kernel=use_kernel,
+        block=block, interpret=interpret)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def qlinear_apply_packed(params: QuantizedLinearParams, x_packed, *,
+                         epilogue: str = "int", scale: float = 1.0,
+                         use_kernel: bool = True,
+                         block: Optional[tuple] = None,
+                         interpret: bool = True):
+    kw = dict(a_bits=params.a_bits, a_signed=params.a_signed,
+              w_bits=params.w_bits, d=params.d, out_bits=params.out_bits,
+              epilogue=epilogue, scale=scale)
+    if not use_kernel:
+        return qmatmul_jnp(x_packed, params.w_packed, params.kappa,
+                           params.lam, params.m, **kw)
+    # pad M to the block multiple the kernel picks
+    m = x_packed.shape[0]
+    pf_a = packing.pack_factor(params.a_bits)
+    k = x_packed.shape[1] * pf_a
+    n = params.w_packed.shape[1]
+    from repro.kernels.qmatmul.kernel import default_block
+    bm, bn, bk = block or default_block(m, n, k, params.a_bits, params.w_bits)
+    bm = min(bm, _round_up(m, 32))
+    xp = _pad_axis(x_packed, bm, 0)
+    wp = _pad_axis(params.w_packed, bn, 1)
+    kappa = _pad_axis(params.kappa, bn, 0)
+    lam = _pad_axis(params.lam, bn, 0)
+    mm = _pad_axis(params.m, bn, 0)
+    out = qmatmul_packed(xp, wp, kappa, lam, mm, block=(bm, bn, bk),
+                         interpret=interpret, **kw)
+    return out[:m, :n]
+
+
+def _round_up(x, mult):
+    return x + (-x) % mult

@@ -1,0 +1,111 @@
+"""Parse compiled HLO for collective bytes + derive roofline terms.
+
+collective_bytes is not in cost_analysis(): we scan the post-optimization
+HLO text for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and sum operand sizes (spec definition: input
+operands; output bytes are recorded too for reference).
+
+Roofline terms (per device, seconds)  — v5e constants:
+    compute    = HLO_FLOPs / peak_FLOPs           (197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / HBM_bw               (819e9 B/s)
+    collective = collective_bytes / link_bw       (~50e9 B/s per link)
+cost_analysis flops/bytes are already per-partition under SPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 / int8 MXU, per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    in_bytes: dict
+    out_bytes: dict
+
+    @property
+    def total_in(self):
+        return sum(self.in_bytes.values())
+
+    @property
+    def total_out(self):
+        return sum(self.out_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVES}
+    in_b = {k: 0 for k in _COLLECTIVES}
+    out_b = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # "<out_shape> op-name(" — fused/async starts count once (-start)
+        m = re.match(r"^[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", ls)
+        if not m:
+            continue
+        out_shape, opname = m.group(1), m.group(2)
+        base = opname.replace("-start", "")
+        if base not in _COLLECTIVES:
+            continue
+        if opname.endswith("-done"):
+            continue
+        args = ls[ls.find("(") + 1:]
+        counts[base] += 1
+        in_b[base] += _shape_bytes(args.split("),", 1)[0]
+                                   if args.startswith("(") else
+                                   args.split(")", 1)[0])
+        out_b[base] += _shape_bytes(out_shape)
+    return CollectiveStats(counts, in_b, out_b)
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             collective_in_bytes: float, n_links: int = 1) -> dict:
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = collective_in_bytes / (LINK_BW * n_links)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms.update({
+        "dominant": dom,
+        "bound_s": bound,
+        # fraction of roofline: useful work time / achievable-bound time
+        "roofline_fraction": (t_compute / bound) if bound > 0 else 1.0,
+    })
+    return terms
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """6·N·D rule (fwd+bwd); callers pass N_active for MoE."""
+    return 6.0 * n_params_active * tokens

@@ -1,0 +1,434 @@
+"""Trip-count-aware cost extraction from post-optimization HLO text.
+
+xla's cost_analysis() visits every computation ONCE — a jax.lax.scan body
+(our layer stack) is counted a single time regardless of trip count
+(verified empirically: 2-layer and 16-layer models report identical flops).
+This walker parses the HLO text, builds the while-loop call graph, reads
+`known_trip_count` from backend_config (fallback: the largest constant in
+the loop condition), and multiplies per-computation costs through.
+
+Costs per computation:
+  flops      — 2 * numel(out) * contraction for every `dot` (+ rough conv);
+               elementwise flops are ignored (MXU roofline dominated).
+  io bytes   — sum of (operand + output) bytes over top-level instructions,
+               skipping pure control ops (tuple/gte/parameter/bitcast/...).
+               This is the post-fusion HBM-traffic approximation.
+  collective — in/out bytes per collective op kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s8v": 1,
+}
+
+_CONTROL_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w[\w]*)\[([\d,]*)\]")
+_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"}')
+
+
+def _parse_instr_line(line: str):
+    """Procedural parse: '%name = <shape> opcode(operands), attrs'.
+    Tuple shapes contain parens, braces and /*index=N*/ comments, so regex
+    on the shape is unreliable — walk balanced parens instead."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0 or not (s.startswith("%") or s[:eq].replace(".", "").replace(
+            "-", "").replace("_", "").isalnum()):
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rhs = s[eq + 3:].lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        i = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        out_shape = rhs[:i + 1]
+        rest = rhs[i + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        out_shape = rhs[:sp]
+        rest = rhs[sp + 1:].lstrip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    return Instr(name, out_shape, m.group(1), rest[m.end():])
+
+
+def shape_numel_bytes(shape_str: str) -> Tuple[int, int]:
+    """Sum over all array shapes found in the string."""
+    numel = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return numel, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_shape: str
+    opcode: str
+    rest: str       # everything after the '('
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]      # param name -> shape str
+    instrs: List[Instr]
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line.strip())
+            if m and ("->" in line):
+                params = {}
+                for pm in re.finditer(r"%?([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                      m.group(3)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(2), params, [],
+                                  is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            cur = None
+            continue
+        ins = _parse_instr_line(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Names of operands in 'a, %b, c), attrs...' (up to closing paren)."""
+    depth = 1
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            token += ch
+    return [t.strip().lstrip("%") for t in token.split(",") if t.strip()]
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    out_numel, _ = shape_numel_bytes(instr.out_shape)
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", instr.rest)
+    ops = _operand_names(instr.rest)
+    if not m or not ops:
+        return 0.0
+    lhs_shape = shapes.get(ops[0], "")
+    dims_m = _SHAPE_RE.search(lhs_shape)
+    if not dims_m:
+        return 0.0
+    dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    contract = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            contract *= dims[int(idx)]
+    return 2.0 * out_numel * contract
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    io_bytes: float
+    collective_in: Dict[str, float]
+    collective_out: Dict[str, float]
+    collective_counts: Dict[str, float]
+    breakdown: Optional[list] = None
+
+    @property
+    def total_collective_in(self):
+        return sum(self.collective_in.values())
+
+
+def _dot_io(ins, shapes) -> int:
+    """dot IO with operand dtypes capped at 2 bytes: the TPU MXU consumes
+    bf16/int8 operands; XLA-CPU's bf16->f32 upcast must not be charged."""
+    total = 0
+    for name in _operand_names(ins.rest):
+        if name in shapes:
+            n, b = shape_numel_bytes(shapes[name])
+            total += min(b, n * 2)
+    n, b = shape_numel_bytes(ins.out_shape)
+    return total + min(b, n * 2)
+
+
+def analyze(text: str, breakdown: bool = False) -> ModuleCosts:
+    comps = parse_module(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # multipliers via BFS over while calls (fusions inherit the caller's
+    # multiplier; their bodies are not separately IO-counted)
+    mult: Dict[str, float] = {entry.name: 1.0}
+    stack = [entry.name]
+    fusion_mult: Dict[str, float] = {}
+    while stack:
+        cname = stack.pop()
+        comp = comps[cname]
+        m0 = mult[cname]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                tm = _TRIP_RE.search(ins.rest)
+                trip = float(tm.group(1)) if tm else _cond_trip(
+                    comps.get(cm.group(1)) if cm else None)
+                for target, f in ((bm, trip), (cm, trip + 1)):
+                    if target and target.group(1) in comps:
+                        tn = target.group(1)
+                        add = m0 * f
+                        if tn in mult:
+                            mult[tn] += add
+                        else:
+                            mult[tn] = add
+                            stack.append(tn)
+            elif ins.opcode in ("fusion", "call", "custom-call", "map",
+                                "reduce", "reduce-window", "scatter", "sort",
+                                "conditional"):
+                for target in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                         ins.rest):
+                    if target in comps:
+                        fusion_mult[target] = fusion_mult.get(target, 0.0) \
+                            + m0
+                # conditional branches
+                for target in re.findall(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations)=\(?%?([\w.\-]+)", ins.rest):
+                    if target in comps:
+                        fusion_mult[target] = fusion_mult.get(target, 0.0) \
+                            + m0
+
+    flops = 0.0
+    io = 0.0
+    bd = []
+    cin = {k: 0.0 for k in _COLLECTIVES}
+    cout = {k: 0.0 for k in _COLLECTIVES}
+    ccnt = {k: 0.0 for k in _COLLECTIVES}
+
+    def _fusion_kind(called: Computation):
+        """Classify a fused computation for IO accounting.
+
+        'convert': pure dtype-convert fusion — a CPU-backend artifact (XLA
+        CPU upcasts bf16 dots to f32); native-bf16 TPUs never materialize
+        these, so count 0 bytes.
+        'dus': root is dynamic-update-slice — XLA aliases in place; count
+        2x the update region + the small operands, not the full buffer.
+        """
+        body_ops = [i for i in called.instrs
+                    if i.opcode not in ("parameter", "constant")]
+        # layout-only fusions (convert/copy/transpose/reshape chains): the
+        # TPU compiler folds these into the consuming dot's operand read —
+        # which the walker charges separately (alias-resolved, bf16-capped)
+        # — so counting them here would double-charge phantom traffic.
+        if body_ops and all(i.opcode in ("convert", "copy", "bitcast",
+                                         "transpose", "reshape")
+                            for i in body_ops):
+            return "convert", None
+        # any DUS inside the fusion: the big buffer is aliased in place on
+        # TPU (converts around it fuse into the producer)
+        for i in body_ops:
+            if i.opcode == "dynamic-update-slice":
+                ops_ = _operand_names(i.rest)
+                upd = ops_[1] if len(ops_) > 1 else None
+                return "dus", upd
+        return "plain", None
+
+    for cname, comp in comps.items():
+        m0 = mult.get(cname)
+        in_fusion = False
+        if m0 is None:
+            m0 = fusion_mult.get(cname)
+            in_fusion = True
+        if m0 is None:
+            continue
+        shapes = dict(comp.params)
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.out_shape
+        # alias pure-convert fusion outputs to their (cheaper) source: XLA
+        # CPU upcasts bf16->f32 for dots; TPU reads the bf16/int8 original,
+        # so consumers must be charged the source bytes.
+        for ins in comp.instrs:
+            if ins.opcode not in ("fusion", "convert", "copy", "bitcast",
+                                  "transpose"):
+                continue
+            if ins.opcode == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                called = comps.get(cm.group(1)) if cm else None
+                if called is None or _fusion_kind(called)[0] != "convert":
+                    continue
+            srcs = [n for n in _operand_names(ins.rest) if n in shapes]
+            if len(srcs) == 1:
+                _, sb = shape_numel_bytes(shapes[srcs[0]])
+                _, ob = shape_numel_bytes(ins.out_shape)
+                if sb <= ob:
+                    shapes[ins.name] = shapes[srcs[0]]
+        for ins in comp.instrs:
+            op = ins.opcode
+            io0 = io
+            if op == "dot":
+                flops += m0 * _dot_flops(ins, shapes)
+                if not in_fusion:
+                    io += m0 * _dot_io(ins, shapes)
+                    if breakdown:
+                        bd.append((io - io0, m0, cname, op, ins.name,
+                                   ins.out_shape[:48]))
+                continue
+            if in_fusion:
+                continue  # IO counted at the fusion call site
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                _, ob = shape_numel_bytes(ins.out_shape)
+                ib = _operand_bytes(ins, shapes)
+                cin[base] += m0 * ib
+                cout[base] += m0 * ob
+                ccnt[base] += m0
+                io += m0 * (ib + ob)
+            elif op in _CONTROL_OPS or op == "while":
+                continue
+            elif op == "dynamic-update-slice":
+                # in-place: traffic = 2x the update region, not the operand
+                ops_ = _operand_names(ins.rest)
+                ub = 0
+                if len(ops_) >= 2 and ops_[1] in shapes:
+                    _, ub = shape_numel_bytes(shapes[ops_[1]])
+                io += m0 * 2 * ub
+            elif op == "dynamic-slice":
+                _, ob = shape_numel_bytes(ins.out_shape)
+                io += m0 * 2 * ob  # read slice + write result
+            elif op == "fusion":
+                called_m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                called = comps.get(called_m.group(1)) if called_m else None
+                kind, upd = ("plain", None) if called is None \
+                    else _fusion_kind(called)
+                if kind == "convert":
+                    continue
+                if kind == "dus":
+                    ub = 0
+                    if upd is not None:
+                        pnames = list(called.params)
+                        if upd in called.params:
+                            # update comes straight from a call operand
+                            idx = pnames.index(upd)
+                            ops_ = _operand_names(ins.rest)
+                            if idx < len(ops_) and ops_[idx] in shapes:
+                                _, ub = shape_numel_bytes(shapes[ops_[idx]])
+                        else:
+                            ishapes = {i.name: i.out_shape
+                                       for i in called.instrs}
+                            if upd in ishapes:
+                                _, ub = shape_numel_bytes(ishapes[upd])
+                    if ub == 0:  # fallback: smallest non-scalar operand
+                        cands = []
+                        for name in _operand_names(ins.rest):
+                            if name in shapes:
+                                _, b2 = shape_numel_bytes(shapes[name])
+                                if b2 > 8:
+                                    cands.append(b2)
+                        ub = min(cands) if cands else 0
+                    io += m0 * 2 * ub
+                    continue
+                # plain fusion: params consumed ONLY via dynamic-slice are
+                # charged at the SLICE size (scan reads one layer of the
+                # stacked params per trip, not the whole stack), bf16-capped
+                # (stacked-param f32 copies are a CPU upcast artifact).
+                ds_params = {}
+                used_elsewhere = set()
+                for i2 in called.instrs:
+                    ops2 = _operand_names(i2.rest)
+                    if i2.opcode == "dynamic-slice" and ops2 and \
+                            ops2[0] in called.params:
+                        n2, b2 = shape_numel_bytes(i2.out_shape)
+                        ds_params.setdefault(ops2[0], 0)
+                        ds_params[ops2[0]] += min(b2, n2 * 2)
+                        ops2 = ops2[1:]
+                    for o2 in ops2:
+                        used_elsewhere.add(o2)
+                _, ob = shape_numel_bytes(ins.out_shape)
+                total = ob
+                pnames = list(called.params)
+                call_ops = _operand_names(ins.rest)
+                for pi, pname in enumerate(pnames):
+                    if pi >= len(call_ops):
+                        break
+                    src = call_ops[pi]
+                    if pname in ds_params and pname not in used_elsewhere:
+                        total += 2 * ds_params[pname]
+                    elif src in shapes:
+                        _, b2 = shape_numel_bytes(shapes[src])
+                        total += b2
+                io += m0 * total
+            else:
+                _, ob = shape_numel_bytes(ins.out_shape)
+                io += m0 * (ob + _operand_bytes(ins, shapes))
+            if breakdown and io > io0:
+                bd.append((io - io0, m0, cname, op, ins.name,
+                           ins.out_shape[:48]))
+    bd2 = sorted(bd, reverse=True)[:40] if breakdown else None
+    return ModuleCosts(flops, io, cin, cout, ccnt, bd2)
+
+
+def _operand_bytes(ins: Instr, shapes: Dict[str, str]) -> int:
+    total = 0
+    for name in _operand_names(ins.rest):
+        if name in shapes:
+            _, b = shape_numel_bytes(shapes[name])
+            total += b
+    return total
+
+
+def _cond_trip(cond: Optional[Computation]) -> float:
+    if cond is None:
+        return 1.0
+    best = 1.0
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, float(m.group(1)))
+    return best

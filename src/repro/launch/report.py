@@ -1,0 +1,69 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+DRY = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x * 1e6:.1f}us"
+    if x < 0.1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x):
+    return f"{x / 2**30:.2f}"
+
+
+def load(mesh: str, tag: str = ""):
+    out = {}
+    for p in sorted(DRY.glob(f"*__{mesh}{tag}.json")):
+        r = json.loads(p.read_text())
+        if r.get("tag", "") != (tag.lstrip("_") if tag else "") or \
+                r.get("quant", "off") != "off":
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def table(mesh: str, tag: str = "") -> str:
+    recs = load(mesh, tag)
+    lines = [
+        "| arch | shape | GiB/dev | compute | memory | collective | "
+        "dominant | roofline frac | useful/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = sorted(recs, key=lambda k: (k[0], k[1]))
+    for key in order:
+        r = recs[key]
+        t = r["roofline"]
+        lines.append(
+            "| {} | {} | {} | {} | {} | {} | {} | {:.1%} | {:.2f} |".format(
+                key[0], key[1], fmt_b(r["bytes_per_device"]["total"]),
+                fmt_s(t["compute_s"]), fmt_s(t["memory_s"]),
+                fmt_s(t["collective_s"]),
+                t["dominant"].replace("_s", ""),
+                t["roofline_fraction"], r["useful_flops_ratio"]))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(table(args.mesh, f"_{args.tag}" if args.tag else ""))
+
+
+if __name__ == "__main__":
+    main()

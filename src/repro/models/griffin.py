@@ -1,0 +1,201 @@
+"""RecurrentGemma / Griffin hybrid: (rec, rec, local-attn) repeating pattern.
+
+38 layers = 12 groups of (RG-LRU, RG-LRU, local attention) + 2 trailing
+RG-LRU blocks. Every layer is followed by an MLP block (pre-norm residual),
+matching Griffin's residual structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import _attn_cfg, _mlp_cfg, _logits
+from repro.nn.attention import attn_apply, attn_decode, attn_def, init_cache
+from repro.nn.layers import (embedding_apply, embedding_def, norm_apply,
+                             norm_def, rope_tables)
+from repro.nn.mlp import mlp_apply, mlp_def
+from repro.nn.module import stack_defs
+from repro.nn.rglru import (RglruConfig, rglru_block_apply,
+                            rglru_block_decode, rglru_block_def,
+                            rglru_init_cache)
+
+
+def _rcfg(cfg: ModelConfig) -> RglruConfig:
+    return RglruConfig(cfg.d_model, cfg.lru_width or cfg.d_model,
+                       cfg.d_conv, cfg.quant)
+
+
+def _group_counts(cfg: ModelConfig):
+    """(n_groups, n_tail_rec): 38 -> (12, 2)."""
+    plen = len(cfg.rnn_pattern)  # ("rec","rec","attn")
+    n_groups = cfg.n_layers // plen
+    return n_groups, cfg.n_layers - n_groups * plen
+
+
+def _rec_layer_def(cfg, dtype):
+    return {"ln": norm_def(cfg.d_model, cfg.norm, dtype),
+            "rec": rglru_block_def(_rcfg(cfg), dtype),
+            "ln2": norm_def(cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_def(_mlp_cfg(cfg), dtype)}
+
+
+def _attn_layer_def(cfg, dtype):
+    return {"ln": norm_def(cfg.d_model, cfg.norm, dtype),
+            "attn": attn_def(_attn_cfg(cfg), dtype),
+            "ln2": norm_def(cfg.d_model, cfg.norm, dtype),
+            "mlp": mlp_def(_mlp_cfg(cfg), dtype)}
+
+
+def griffin_def(cfg: ModelConfig, dtype=jnp.float32):
+    ng, tail = _group_counts(cfg)
+    n_rec_per_group = sum(1 for k in cfg.rnn_pattern if k == "rec")
+    p = {
+        "embed": embedding_def(cfg.vocab, cfg.d_model, dtype),
+        "rec_layers": stack_defs(_rec_layer_def(cfg, dtype),
+                                 ng * n_rec_per_group + tail),
+        "attn_layers": stack_defs(_attn_layer_def(cfg, dtype), ng),
+        "final_norm": norm_def(cfg.d_model, cfg.norm, dtype),
+    }
+    return p
+
+
+def _rec_block(cfg, lp, x):
+    x = x + rglru_block_apply(lp["rec"], norm_apply(lp.get("ln", {}), x, cfg.norm),
+                              _rcfg(cfg))
+    x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
+                      _mlp_cfg(cfg))
+    return x
+
+
+def _attn_block(cfg, lp, x, cos, sin):
+    h, _ = attn_apply(lp["attn"], norm_apply(lp.get("ln", {}), x, cfg.norm),
+                      _attn_cfg(cfg), cos=cos, sin=sin, mode="local",
+                      window=cfg.window)
+    x = x + h
+    x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
+                      _mlp_cfg(cfg))
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, *, src_embed=None,
+            collect_kv=False):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    x = embedding_apply(params["embed"], tokens).astype(dtype)
+    if cfg.scale_embed:
+        x = x * (cfg.d_model ** 0.5)
+    s = tokens.shape[1]
+    cos, sin = rope_tables(s, cfg.head_dim_, cfg.rope_theta, dtype)
+    ng, tail = _group_counts(cfg)
+    nrg = sum(1 for k in cfg.rnn_pattern if k == "rec")
+
+    rec_grouped = jax.tree.map(
+        lambda a: a[:ng * nrg].reshape(ng, nrg, *a.shape[1:]),
+        params["rec_layers"])
+    rec_tail = jax.tree.map(lambda a: a[ng * nrg:], params["rec_layers"])
+
+    def group_body(x, per_group):
+        rp, ap = per_group
+
+        def inner(x2, lp):
+            return _rec_block(cfg, lp, x2), None
+
+        x, _ = jax.lax.scan(inner, x, rp)
+        x = _attn_block(cfg, ap, x, cos, sin)
+        return x, None
+
+    group_body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = jax.lax.scan(group_body, x, (rec_grouped, params["attn_layers"]))
+
+    def tail_body(x, lp):
+        return _rec_block(cfg, lp, x), None
+    x, _ = jax.lax.scan(tail_body, x, rec_tail)
+
+    x = norm_apply(params.get("final_norm", {}), x, cfg.norm)
+    return _logits(params, x, cfg), jnp.float32(0.0), None
+
+
+def griffin_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    ng, tail = _group_counts(cfg)
+    nrg = sum(1 for k in cfg.rnn_pattern if k == "rec")
+    acfg = _attn_cfg(cfg)
+    # local attention only needs `window` KV slots, but decode uses absolute
+    # positions; keep window-sized ring handled as full buffer of max_len
+    # capped at window for memory (ring indexing = index % window).
+    attn_len = min(max_len, cfg.window)
+    rec_one = rglru_init_cache(_rcfg(cfg), batch, dtype)
+    return {
+        "rec": jax.tree.map(
+            lambda a: jnp.zeros((ng * nrg + tail,) + a.shape, a.dtype),
+            rec_one),
+        "kv": jax.tree.map(
+            lambda a: jnp.zeros((ng,) + a.shape, a.dtype),
+            init_cache(acfg, batch, attn_len, dtype)),
+    }
+
+
+def decode_step(params, cache, token, index, cfg: ModelConfig, *,
+                src_embed=None):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    x = embedding_apply(params["embed"], token).astype(dtype)
+    if cfg.scale_embed:
+        x = x * (cfg.d_model ** 0.5)
+    ng, tail = _group_counts(cfg)
+    nrg = sum(1 for k in cfg.rnn_pattern if k == "rec")
+    acfg = _attn_cfg(cfg)
+
+    rec_grouped = jax.tree.map(
+        lambda a: a[:ng * nrg].reshape(ng, nrg, *a.shape[1:]), cache["rec"])
+    rp_grouped = jax.tree.map(
+        lambda a: a[:ng * nrg].reshape(ng, nrg, *a.shape[1:]),
+        params["rec_layers"])
+
+    def group_body(x, per_group):
+        rp, rc, ap, kv_l = per_group
+
+        def inner(x2, pl):
+            lp, c_l = pl
+            h, nc = rglru_block_decode(
+                lp["rec"], norm_apply(lp.get("ln", {}), x2, cfg.norm), c_l,
+                _rcfg(cfg))
+            x2 = x2 + h
+            x2 = x2 + mlp_apply(lp["mlp"],
+                                norm_apply(lp.get("ln2", {}), x2, cfg.norm),
+                                _mlp_cfg(cfg))
+            return x2, nc
+
+        x, nrc = jax.lax.scan(inner, x, (rp, rc))
+        h, nkv = attn_decode(
+            ap["attn"], norm_apply(ap.get("ln", {}), x, cfg.norm), kv_l, index,
+            acfg, theta=cfg.rope_theta, mode="local", window=cfg.window,
+            ring=True)
+        x = x + h
+        x = x + mlp_apply(ap["mlp"], norm_apply(ap.get("ln2", {}), x, cfg.norm),
+                          _mlp_cfg(cfg))
+        return x, (nrc, nkv)
+
+    ap_stack = params["attn_layers"]
+    x, (new_rec_g, new_kv) = jax.lax.scan(
+        group_body, x, (rp_grouped, rec_grouped, ap_stack, cache["kv"]))
+
+    rec_tail_p = jax.tree.map(lambda a: a[ng * nrg:], params["rec_layers"])
+    rec_tail_c = jax.tree.map(lambda a: a[ng * nrg:], cache["rec"])
+
+    def tail_body(x, pl):
+        lp, c_l = pl
+        h, nc = rglru_block_decode(
+            lp["rec"], norm_apply(lp.get("ln", {}), x, cfg.norm), c_l, _rcfg(cfg))
+        x = x + h
+        x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
+                          _mlp_cfg(cfg))
+        return x, nc
+
+    x, new_rec_t = jax.lax.scan(tail_body, x, (rec_tail_p, rec_tail_c))
+
+    new_rec = jax.tree.map(
+        lambda g, t: jnp.concatenate(
+            [g.reshape(ng * nrg, *g.shape[2:]), t], axis=0),
+        new_rec_g, new_rec_t)
+    x = norm_apply(params.get("final_norm", {}), x, cfg.norm)
+    return _logits(params, x, cfg), {"rec": new_rec, "kv": new_kv}

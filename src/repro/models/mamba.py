@@ -1,0 +1,69 @@
+"""Mamba-2 (SSD) language model — attention-free, O(1)-state decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import _logits
+from repro.nn.layers import (embedding_apply, embedding_def, norm_apply,
+                             norm_def)
+from repro.nn.module import stack_defs
+from repro.nn.ssm import (MambaConfig, mamba_apply, mamba_decode, mamba_def,
+                          mamba_init_cache)
+
+
+def _mcfg(cfg: ModelConfig) -> MambaConfig:
+    return MambaConfig(cfg.d_model, cfg.d_state, cfg.d_conv, cfg.expand,
+                       cfg.headdim, cfg.ssd_chunk, cfg.quant)
+
+
+def mamba_lm_def(cfg: ModelConfig, dtype=jnp.float32):
+    return {
+        "embed": embedding_def(cfg.vocab, cfg.d_model, dtype),
+        "layers": stack_defs({
+            "ln": norm_def(cfg.d_model, cfg.norm, dtype),
+            "mixer": mamba_def(_mcfg(cfg), dtype)}, cfg.n_layers),
+        "final_norm": norm_def(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, *, src_embed=None,
+            collect_kv=False):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    x = embedding_apply(params["embed"], tokens).astype(dtype)
+    mcfg = _mcfg(cfg)
+
+    def body(x, lp):
+        x = x + mamba_apply(lp["mixer"], norm_apply(lp.get("ln", {}), x, cfg.norm),
+                            mcfg)
+        return x, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = norm_apply(params.get("final_norm", {}), x, cfg.norm)
+    return _logits(params, x, cfg), jnp.float32(0.0), None
+
+
+def mamba_lm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                        dtype=jnp.bfloat16):
+    one = mamba_init_cache(_mcfg(cfg), batch, dtype)
+    return {"ssm": jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)}
+
+
+def decode_step(params, cache, token, index, cfg: ModelConfig, *,
+                src_embed=None):
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    x = embedding_apply(params["embed"], token).astype(dtype)
+    mcfg = _mcfg(cfg)
+
+    def body(x, per_layer):
+        lp, c_l = per_layer
+        h, nc = mamba_decode(lp["mixer"], norm_apply(lp.get("ln", {}), x, cfg.norm),
+                             c_l, mcfg)
+        return x + h, nc
+
+    x, new_c = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+    x = norm_apply(params.get("final_norm", {}), x, cfg.norm)
+    return _logits(params, x, cfg), {"ssm": new_c}

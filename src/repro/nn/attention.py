@@ -1,0 +1,244 @@
+"""Grouped-query attention with causal/local/bidirectional masks, cross
+attention, and an (optionally int8-quantized) KV cache for decode.
+
+GQA is computed with an explicit group dim (no KV head replication is ever
+materialized). All projections are quantization-aware Dense layers — the
+paper's packed sub-byte GEMM applies to every projection here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import (QuantConfig, QOFF, dense_apply, dense_def,
+                             rope_apply, rope_single)
+from repro.parallel.ctx import active_mesh, constrain, constrain_first
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False        # qwen2.5
+    kv_quant_bits: int = 16       # 16 (bf16) | 8 (int8 cache)
+    qcfg: QuantConfig = QOFF
+
+    @property
+    def groups(self):
+        return self.n_heads // self.kv_heads
+
+
+def attn_def(cfg: AttnConfig, dtype=jnp.float32):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    return {
+        "wq": dense_def(d, h * dh, ("embed", "heads"), bias=cfg.qkv_bias,
+                        qcfg=cfg.qcfg, dtype=dtype),
+        "wk": dense_def(d, hk * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias,
+                        qcfg=cfg.qcfg, dtype=dtype),
+        "wv": dense_def(d, hk * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias,
+                        qcfg=cfg.qcfg, dtype=dtype),
+        "wo": dense_def(h * dh, d, ("heads", "embed"), qcfg=cfg.qcfg,
+                        dtype=dtype),
+    }
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _mask_full(q_len, k_len, mode, window, q_offset=0):
+    """(q_len, k_len) bool allow-mask. mode: causal|local|bidir.
+    `window` may be a traced scalar (per-layer scanned value)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(k_len)[None, :]
+    if mode == "bidir":
+        return jnp.ones((q_len, k_len), bool)
+    allow = k_pos <= q_pos
+    if mode == "local":
+        allow = allow & (q_pos - k_pos < window)
+    return allow
+
+
+def attn_strategy(hk: int, groups: int, s_len: int, t_len: int,
+                  batch=None) -> str:
+    """One coherent sharding strategy per attention call (mixing per-tensor
+    first-fit choices forces SPMD reshard copies of score-sized tensors):
+
+    'tp'  — kv_heads divide the model axis: classic TP (Megatron).
+    'gp'  — q-head groups divide: shard the GQA group dim (q-only TP).
+    'cp'  — context parallel: shard q-seq (train/prefill) / kv-seq (decode),
+            GSPMD emits partial-softmax psums (flash-decode style).
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return "none"
+    m = mesh.shape.get("model", 1)
+    if hk % m == 0:
+        return "tp"
+    # NOTE: a batch-parallel variant (batch over data x model for the
+    # attention region) was tried for the few-kv-head case and REFUTED:
+    # per-layer residual resharding across the model axis cost more than
+    # the CP score handling it replaced (kimi train_4k: collective term
+    # 56.9s -> 125.3s, compute 10.9s -> 46.8s; EXPERIMENTS.md §Perf).
+    if (s_len > 1 and s_len % m == 0) or (s_len == 1 and t_len % m == 0):
+        return "cp"
+    if groups % m == 0:
+        return "gp"
+    return "none"
+
+
+_SCORE_AXES = {  # (B, Hk, G, S, T)
+    "tp": ("batch", "kv_heads", None, None, None),
+    "gp": ("batch", None, "heads", None, None),
+    "bp": ("batch_full", None, None, None, None),
+}
+
+
+def _sdpa(q, k, v, mask, strategy="none"):
+    """q: (B,S,Hk,G,Dh), k/v: (B,T,Hk,Dh), mask broadcastable to
+    (B,Hk,G,S,T). float32 softmax."""
+    dh = q.shape[-1]
+    s_len = q.shape[1]
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, k,
+                        preferred_element_type=jnp.float32)
+    if strategy in _SCORE_AXES:
+        scores = constrain(scores, _SCORE_AXES[strategy])
+    elif strategy == "cp":
+        scores = constrain(scores, ("batch", None, None, "seq_model", None)
+                           if s_len > 1 else
+                           ("batch", None, None, None, "kv_seq"))
+    scores = scores * (dh ** -0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _kv_store(x, bits):
+    if bits == 8:
+        scale = 8.0 / 127.0  # static symmetric grid for normalized k/v
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                        -127, 127).astype(jnp.int8)
+    return x
+
+
+def _kv_load(x, bits, dtype):
+    if bits == 8:
+        return (x.astype(jnp.float32) * (8.0 / 127.0)).astype(dtype)
+    return x
+
+
+def attn_apply(p, x, cfg: AttnConfig, *, cos, sin, mode="causal",
+               window=None, cross_kv=None):
+    """Full-sequence attention (training / prefill).
+
+    cross_kv: (k_src, v_src) pre-projected encoder K/V for cross-attention
+    (mode must be 'bidir'; RoPE skipped).
+    Returns (out, (k, v)) so callers can build decode caches from prefill.
+    """
+    b, s, _ = x.shape
+    h, hk, dh, g = cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.groups
+    q = _split_heads(dense_apply(p["wq"], x, qcfg=cfg.qcfg), h, dh)
+    t_len = x.shape[1] if cross_kv is None else cross_kv[0].shape[1]
+    strat = attn_strategy(hk, g, s, t_len, batch=b)
+    if cross_kv is None:
+        k = _split_heads(dense_apply(p["wk"], x, qcfg=cfg.qcfg), hk, dh)
+        v = _split_heads(dense_apply(p["wv"], x, qcfg=cfg.qcfg), hk, dh)
+        kv_axes = {"tp": ("batch", None, "kv_heads", None),
+                   "gp": ("batch", None, None, None),
+                   "bp": ("batch_full", None, None, None),
+                   "cp": ("batch", None, None, None)}.get(strat)
+        if kv_axes:
+            k = constrain(k, kv_axes)
+            v = constrain(v, kv_axes)
+        q = rope_apply(q, cos, sin)
+        k = rope_apply(k, cos, sin)
+    else:
+        k, v = cross_kv
+    q = q.reshape(b, s, hk, g, dh)
+    q_axes = {"tp": ("batch", None, "kv_heads", None, None),
+              "gp": ("batch", None, None, "heads", None),
+              "bp": ("batch_full", None, None, None, None),
+              "cp": ("batch", "seq_model", None, None, None)}.get(strat)
+    if q_axes:
+        q = constrain(q, q_axes)
+    t = k.shape[1]
+    mask = _mask_full(s, t, mode, window)[None, None, None]
+    out = _sdpa(q, k, v, mask, strat)
+    out = out.reshape(b, s, h * dh)
+    y = dense_apply(p["wo"], out, qcfg=cfg.qcfg)
+    return constrain(y, ("batch", None, None)), (k, v)
+
+
+def cross_kv_project(p, enc_out, cfg: AttnConfig):
+    """Project encoder states once; reused across decode steps."""
+    hk, dh = cfg.kv_heads, cfg.head_dim
+    k = _split_heads(dense_apply(p["wk"], enc_out, qcfg=cfg.qcfg), hk, dh)
+    v = _split_heads(dense_apply(p["wv"], enc_out, qcfg=cfg.qcfg), hk, dh)
+    return k, v
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.kv_heads, cfg.head_dim)
+    store_t = jnp.int8 if cfg.kv_quant_bits == 8 else dtype
+    return {"k": jnp.zeros(shape, store_t), "v": jnp.zeros(shape, store_t)}
+
+
+def attn_decode(p, x, cache, index, cfg: AttnConfig, *, theta=10000.0,
+                mode="causal", window=None, cross_kv=None,
+                ring: bool = False):
+    """One-token decode. x: (B,1,d); index: scalar int32 TRUE position;
+    cache: dict(k,v) of (B,T,Hk,Dh). Returns (out, new_cache).
+
+    ring=True treats the cache as a ring buffer of T=window slots (local
+    attention): slot = index % T, each slot j holds true position
+    index - ((index - j) mod T); RoPE always uses true positions so the
+    relative phases stay exact across wraps.
+    """
+    b = x.shape[0]
+    h, hk, dh, g = cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.groups
+    q = _split_heads(dense_apply(p["wq"], x, qcfg=cfg.qcfg), h, dh)
+    if cross_kv is None:
+        k_new = _split_heads(dense_apply(p["wk"], x, qcfg=cfg.qcfg), hk, dh)
+        v_new = _split_heads(dense_apply(p["wv"], x, qcfg=cfg.qcfg), hk, dh)
+        q = rope_single(q, index, theta)
+        k_new = rope_single(k_new, index, theta)
+        kq = _kv_store(k_new, cfg.kv_quant_bits)
+        vq = _kv_store(v_new, cfg.kv_quant_bits)
+        t = cache["k"].shape[1]
+        slot = (index % t) if ring else index
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot,
+                                                     axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot,
+                                                     axis=1),
+        }
+        k = _kv_load(cache["k"], cfg.kv_quant_bits, x.dtype)
+        v = _kv_load(cache["v"], cfg.kv_quant_bits, x.dtype)
+        k_pos = jnp.arange(t)[None, :]
+        if ring:
+            true_pos = index - ((index - k_pos) % t)
+            allow = true_pos >= 0
+            if window is not None:
+                allow = allow & (index - true_pos < window)
+        else:
+            allow = k_pos <= index
+            if mode == "local":
+                allow = allow & (index - k_pos < window)
+    else:
+        k, v = cross_kv
+        t = k.shape[1]
+        allow = jnp.ones((1, t), bool)
+    q = q.reshape(b, 1, hk, g, dh)
+    strat = attn_strategy(hk, g, 1, t)
+    mask = allow[:, None, None, None, :]  # (B,1,1,1,T) / (1,...)
+    out = _sdpa(q, k, v, mask, strat)
+    out = out.reshape(b, 1, h * dh)
+    return dense_apply(p["wo"], out, qcfg=cfg.qcfg), cache

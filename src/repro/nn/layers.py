@@ -1,0 +1,216 @@
+"""Core layers: quantization-aware Dense, embeddings, norms, RoPE.
+
+Dense is where the paper's technique plugs into every architecture: a
+`QuantConfig` selects fp / fake-quant (QAT) / integer deployment mode, the
+latter holding chunk-planar *packed* sub-byte weights in HBM and running the
+int8 MXU GEMM with a dequant epilogue (W{8,4,2}A8 serving) — the XpulpNN
+pipeline adapted to TPU (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.quantize import QuantSpec, fake_quantize
+from repro.nn.module import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "off"        # off | fake | int
+    w_bits: int = 8
+    a_bits: int = 8
+    # static activation scale (absmax) used in int mode; per-tensor dynamic
+    # quantization when None (max computed on the fly; costs a reduction)
+    a_absmax: Optional[float] = 4.0
+    use_kernel: bool = False  # Pallas kernel (interpret) vs XLA-native path
+
+    @property
+    def enabled(self):
+        return self.mode != "off"
+
+
+QOFF = QuantConfig()
+
+
+# ---------------------------------------------------------------- dense ---
+
+def dense_def(d_in: int, d_out: int, axes=("embed", "mlp"), *,
+              bias: bool = False, qcfg: QuantConfig = QOFF,
+              dtype=jnp.float32, scale: float = 1.0):
+    if qcfg.mode == "int":
+        kp = packing.padded_size(d_in) // packing.pack_factor(qcfg.w_bits)
+        p = {"w_packed": ParamDef((kp, d_out), (axes[0], axes[1]),
+                                  "zeros", jnp.int8),
+             "w_scale": ParamDef((d_out,), (axes[1],), "ones", jnp.float32)}
+    else:
+        p = {"w": ParamDef((d_in, d_out), axes, "normal", dtype, scale)}
+    if bias:
+        p["b"] = ParamDef((d_out,), (axes[1],), "zeros", dtype)
+    return p
+
+
+def dense_apply(p, x, *, qcfg: QuantConfig = QOFF, precision=None):
+    """x: (..., d_in) bf16/f32 -> (..., d_out)."""
+    if qcfg.mode == "int":
+        y = _int_matmul(p, x, qcfg)
+    elif qcfg.mode == "fake":
+        w = p["w"]
+        sw = QuantSpec.weight(qcfg.w_bits, 3.0 / (w.shape[0] ** 0.5))
+        sa = QuantSpec(qcfg.a_bits, True, -qcfg.a_absmax, qcfg.a_absmax)
+        y = jnp.matmul(fake_quantize(x, sa).astype(x.dtype),
+                       fake_quantize(w, sw).astype(x.dtype))
+    else:
+        y = jnp.matmul(x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def _int_matmul(p, x, qcfg: QuantConfig):
+    """W{8,4,2}A8 integer GEMM with dequant epilogue (XLA-native path).
+
+    Packed weights are unpacked to int8 next to the MXU; activations are
+    symmetrically quantized to int8 with a static scale. HBM traffic for
+    weights is 1/pf of the bf16 baseline — the paper's sub-byte gain mapped
+    to the TPU memory roofline term.
+    """
+    d_in = x.shape[-1]
+    absmax = qcfg.a_absmax or 4.0
+    a_scale = absmax / 127.0
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / a_scale), -127, 127
+                   ).astype(jnp.int8)
+    x_q = packing.pad_to_chunk(x_q, axis=-1)
+    w_int = packing.unpack(p["w_packed"], qcfg.w_bits, True, axis=0)
+    acc = jax.lax.dot_general(
+        x_q, w_int, (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    scale = (p["w_scale"] * a_scale).astype(jnp.float32)
+    return (acc.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def pack_dense_weights(w, w_bits: int):
+    """fp weights (K,N) -> (w_packed, w_scale) for int-mode params
+    (per-output-channel symmetric grids)."""
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    absmax = jnp.maximum(absmax, 1e-8)
+    int_max = packing.int_range(w_bits, True)[1] if w_bits == 8 else (
+        (1 << (w_bits - 1)) - 1)
+    w_scale = absmax / int_max
+    w_hat = jnp.clip(jnp.round(w / w_scale), -int_max, int_max
+                     ).astype(jnp.int8)
+    w_hat = packing.pad_to_chunk(w_hat, axis=0)
+    return packing.pack(w_hat, w_bits, axis=0), w_scale
+
+
+# ------------------------------------------------------------ embedding ---
+
+VOCAB_PAD = 256  # pad vocab so logits/vocab-sharded ops divide the mesh
+# (odd vocabs — mamba2 50280, seamless 256206 — otherwise replicate the
+# (tokens x vocab) logits per device: +52 GB/dev f32 at mamba2 train_4k)
+
+
+def padded_vocab(vocab: int) -> int:
+    return vocab + (-vocab) % VOCAB_PAD
+
+
+def embedding_def(vocab: int, d: int, dtype=jnp.float32):
+    return {"table": ParamDef((padded_vocab(vocab), d), ("vocab", "embed"),
+                              "embed", dtype, scale=1.0)}
+
+
+def embedding_apply(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def embedding_logits(p, x, vocab: int = 0):
+    """Tied output head: (..., d) @ (vocab_pad, d)^T. Padded rows are
+    masked to -inf so the softmax ignores them."""
+    lg = jnp.matmul(x, p["table"].astype(x.dtype).T)
+    vp = p["table"].shape[0]
+    if vocab and vp != vocab:
+        mask = (jnp.arange(vp) < vocab)
+        lg = jnp.where(mask, lg, jnp.asarray(-1e9, lg.dtype))
+    return lg
+
+
+# ---------------------------------------------------------------- norms ---
+
+def norm_def(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    if kind == "nonparam_ln":   # OLMo: non-parametric LayerNorm
+        return {}
+    if kind == "layernorm":
+        return {"scale": ParamDef((d,), ("embed",), "ones", dtype),
+                "bias": ParamDef((d,), ("embed",), "zeros", dtype)}
+    # rmsnorm / gemma_rmsnorm ((1+scale) form)
+    return {"scale": ParamDef((d,), ("embed",),
+                              "zeros" if kind == "gemma_rmsnorm" else "ones",
+                              dtype)}
+
+
+def norm_apply(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind in ("layernorm", "nonparam_ln"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(
+                jnp.float32)
+        return y.astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if kind == "gemma_rmsnorm":
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ---
+
+def rope_tables(seq_len: int, head_dim: int, theta: float = 10000.0,
+                dtype=jnp.float32):
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)            # (S, half)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def rope_apply(x, cos, sin):
+    """x: (..., S, H, Dh); tables (S, Dh/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def rope_apply_at(x, cos, sin, positions):
+    """Decode-time RoPE: positions (B,) int32 index the tables."""
+    c = jnp.take(cos, positions, axis=0)[:, None, None, :]  # (B,1,1,half)
+    s = jnp.take(sin, positions, axis=0)[:, None, None, :]
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def rope_single(x, position, theta):
+    """Table-free decode RoPE: x (B,1,H,Dh), scalar position.
+
+    `theta` may be a traced scalar (per-layer dual-theta schedules). Avoids
+    materializing (max_len, Dh/2) tables in decode — at 512k context the
+    tables alone would cost hundreds of MB.
+    """
+    half = x.shape[-1] // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    freqs = jnp.power(theta, -jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = position.astype(jnp.float32) * freqs          # (half,)
+    c = jnp.cos(ang).astype(x.dtype)[None, None, None, :]
+    s = jnp.sin(ang).astype(x.dtype)[None, None, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

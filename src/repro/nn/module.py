@@ -1,0 +1,110 @@
+"""Minimal functional parameter system (no flax dependency).
+
+A module is a pair of plain functions over nested dicts:
+  *_def(cfg)   -> tree of ParamDef (single source of truth: shape + logical
+                  axes + initializer)
+  *_apply(p,.) -> forward
+
+`init_params` materializes a ParamDef tree with per-leaf derived RNG keys;
+`logical_specs` extracts the logical-axis tree that parallel/sharding.py
+turns into PartitionSpecs. Layer stacking for lax.scan prepends a "layers"
+axis via `stack_defs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple          # logical axis names, len == len(shape), None ok
+    init: str = "normal"  # normal | zeros | ones | embed | scalar:<v>
+    dtype: Any = jnp.float32
+    scale: float = 1.0   # stddev multiplier for "normal" (fan-in scaled)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(d: ParamDef, key):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init.startswith("scalar:"):
+        return jnp.full(d.shape, float(d.init.split(":")[1]), d.dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape) * d.scale).astype(d.dtype)
+    # fan-in scaled normal: last-but-one dim is fan-in for matrices
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+    std = d.scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    """Materialize a ParamDef tree. Keys are derived from the tree path via
+    fold_in of stable hashes, so adding a parameter never reshuffles others
+    (important for elastic restarts / warm starts)."""
+    leaves = _flatten(defs)
+    out = {}
+    for path, d in leaves:
+        k = key
+        for part in path:
+            k = jax.random.fold_in(k, _stable_hash(part))
+        _set(out, path, _init_leaf(d, k))
+    return out
+
+
+def logical_specs(defs):
+    leaves = _flatten(defs)
+    out = {}
+    for path, d in leaves:
+        _set(out, path, d.axes)
+    return out
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (for scan-over-layers parameter stacking)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes,
+                           d.init, d.dtype, d.scale),
+        defs, is_leaf=_is_def)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for ch in str(s):
+        h = (h ^ ord(ch)) * 16777619 & 0xFFFFFFFF
+    return h
+
+
+def _flatten(tree, path=()):
+    if _is_def(tree):
+        return [(path, tree)]
+    out = []
+    for k in sorted(tree.keys()):
+        out.extend(_flatten(tree[k], path + (k,)))
+    return out
+
+
+def _set(d, path, value):
+    for p in path[:-1]:
+        d = d.setdefault(p, {})
+    d[path[-1]] = value

@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Diagonal gated linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t*x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t), computed with
+jax.lax.associative_scan for training/prefill and one-step update for
+decode. Projections are quantization-aware Dense (the paper's GEMMs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import QOFF, QuantConfig, dense_apply, dense_def
+from repro.nn.module import ParamDef
+from repro.parallel.ctx import constrain
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RglruConfig:
+    d_model: int
+    lru_width: int
+    d_conv: int = 4
+    qcfg: QuantConfig = QOFF
+
+
+def rglru_block_def(cfg: RglruConfig, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "in_x": dense_def(d, w, ("embed", "mlp"), qcfg=cfg.qcfg, dtype=dtype),
+        "in_gate": dense_def(d, w, ("embed", "mlp"), qcfg=cfg.qcfg,
+                             dtype=dtype),
+        "conv_w": ParamDef((cfg.d_conv, w), (None, "mlp"), "normal", dtype),
+        "conv_b": ParamDef((w,), ("mlp",), "zeros", dtype),
+        "w_a": dense_def(w, w, ("mlp", "mlp2"), bias=True, qcfg=cfg.qcfg,
+                         dtype=dtype),
+        "w_i": dense_def(w, w, ("mlp", "mlp2"), bias=True, qcfg=cfg.qcfg,
+                         dtype=dtype),
+        "lam": ParamDef((w,), ("mlp",), "scalar:0.5", jnp.float32),
+        "out": dense_def(w, d, ("mlp", "embed"), qcfg=cfg.qcfg, dtype=dtype),
+    }
+
+
+def _gates(p, x, cfg):
+    r = jax.nn.sigmoid(dense_apply(p["w_a"], x, qcfg=cfg.qcfg)
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["w_i"], x, qcfg=cfg.qcfg)
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, :] * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i
+
+
+def _conv_causal(u, w, b):
+    from repro.nn.ssm import _causal_conv_dw
+    return _causal_conv_dw(u, w) + b[None, None, :]
+
+
+def rglru_block_apply(p, xin, cfg: RglruConfig):
+    """Full-sequence recurrent block. xin: (B,L,d)."""
+    gate = constrain(
+        jax.nn.gelu(dense_apply(p["in_gate"], xin, qcfg=cfg.qcfg)),
+        ("batch", None, "mlp"))
+    x = constrain(dense_apply(p["in_x"], xin, qcfg=cfg.qcfg),
+                  ("batch", None, "mlp"))
+    x = _conv_causal(x, p["conv_w"].astype(xin.dtype),
+                     p["conv_b"].astype(xin.dtype))
+    a, bx_gate = _gates(p, x, cfg)
+    bx = bx_gate * x.astype(jnp.float32)
+    # h_t = a_t h_{t-1} + bx_t: associative scan with (a, b) composition
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    y = (h.astype(xin.dtype) * gate)
+    return dense_apply(p["out"], y, qcfg=cfg.qcfg)
+
+
+def rglru_init_cache(cfg: RglruConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_block_decode(p, xin, cache, cfg: RglruConfig):
+    """Single-token decode. xin: (B,1,d)."""
+    gate = jax.nn.gelu(dense_apply(p["in_gate"], xin, qcfg=cfg.qcfg))[:, 0]
+    x = dense_apply(p["in_x"], xin, qcfg=cfg.qcfg)[:, 0]
+    conv_buf = jnp.concatenate([cache["conv"], x[:, None, :]], axis=1)
+    w = p["conv_w"].astype(xin.dtype)
+    xc = jnp.einsum("bkc,kc->bc", conv_buf, w) + p["conv_b"].astype(xin.dtype)
+    a, bx_gate = _gates(p, xc, cfg)
+    h = a * cache["h"] + bx_gate * xc.astype(jnp.float32)
+    y = (h.astype(xin.dtype) * gate)
+    out = dense_apply(p["out"], y[:, None, :], qcfg=cfg.qcfg)
+    return out, {"conv": conv_buf[:, 1:], "h": h}

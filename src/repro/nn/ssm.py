@@ -1,0 +1,229 @@
+"""Mamba-2 SSD (state-space duality) block — chunked parallel training form
+plus O(1)-state decode. Follows the minimal SSD reference of Dao & Gu
+(arXiv:2405.21060) §6, ported to JAX einsums.
+
+The paper's technique applies to the in/out projections (GEMM-shaped); the
+scan itself keeps fp32 state (the paper's rule: accumulators stay
+high-precision).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import QOFF, QuantConfig, dense_apply, dense_def
+from repro.nn.module import ParamDef
+from repro.parallel.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 256
+    qcfg: QuantConfig = QOFF
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.d_state  # x + B + C channels
+
+
+def mamba_def(cfg: MambaConfig, dtype=jnp.float32):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    d_in_proj = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": dense_def(cfg.d_model, d_in_proj, ("embed", "mlp"),
+                             qcfg=cfg.qcfg, dtype=dtype),
+        "conv_w": ParamDef((cfg.d_conv, cfg.conv_dim), (None, "mlp"),
+                           "normal", dtype),
+        "conv_b": ParamDef((cfg.conv_dim,), ("mlp",), "zeros", dtype),
+        "a_log": ParamDef((h,), (None,), "zeros", jnp.float32),
+        "d_skip": ParamDef((h,), (None,), "ones", jnp.float32),
+        "dt_bias": ParamDef((h,), (None,), "zeros", jnp.float32),
+        "norm_scale": ParamDef((di,), ("mlp",), "ones", dtype),
+        "out_proj": dense_def(di, cfg.d_model, ("mlp", "embed"),
+                              qcfg=cfg.qcfg, dtype=dtype),
+    }
+
+
+def _segsum(a):
+    """(..., l) -> (..., l, l) lower-triangular cumulative segment sums."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def _ssd_chunked(x, a, b, c, chunk):
+    """SSD scan. x: (B,L,H,P) values; a: (B,L,H) log-decay (= dt*A, <=0);
+    b, c: (B,L,H,N). Returns y (B,L,H,P) and final state (B,H,P,N)."""
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    nc = l // chunk
+    xs = x.reshape(bs, nc, chunk, h, p)
+    as_ = a.reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,C,l)
+    bs_ = b.reshape(bs, nc, chunk, h, n)
+    cs_ = c.reshape(bs, nc, chunk, h, n)
+
+    a_cum = jnp.cumsum(as_, axis=-1)                         # (B,H,C,l)
+
+    # 1. intra-chunk (diagonal blocks)
+    ll = jnp.exp(_segsum(as_)).astype(xs.dtype)              # (B,H,C,l,l)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        cs_, bs_, ll, xs,
+                        preferred_element_type=jnp.float32)
+
+    # 2. states at chunk ends
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum).astype(xs.dtype)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn",
+                        bs_, decay_states, xs,
+                        preferred_element_type=jnp.float32)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = a_cum[..., -1]                             # (B,H,C)
+    pad = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    dc = jnp.exp(_segsum(pad))                               # (B,H,C+1,C+1)
+    dc = jnp.where(jnp.isfinite(dc), dc, 0.0)
+    init = jnp.zeros((bs, 1) + states.shape[2:], states.dtype)
+    all_states = jnp.concatenate([init, states], axis=1)     # (B,C+1,H,P,N)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dc[..., :], all_states)
+    prev_states = new_states[:, :-1]                         # (B,C,H,P,N)
+    final_state = new_states[:, -1]
+
+    # 4. state -> output
+    out_decay = jnp.exp(a_cum).astype(xs.dtype)              # (B,H,C,l)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       cs_, prev_states.astype(xs.dtype), out_decay,
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(bs, l, h, p)
+    return y, final_state
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv. u: (B,L,C); w: (K,C).
+
+    Uses lax.conv_general_dilated (depthwise, causal padding): the shift-
+    and-add formulation materialized k=4 full-sequence copies per call —
+    ~600 GB/device/step at mamba2 train_4k (see EXPERIMENTS.md §Perf)."""
+    k = w.shape[0]
+    c = u.shape[-1]
+    rhs = w.T[:, None, :, None]          # (C, 1, K, 1) OIHW-ish
+    y = jax.lax.conv_general_dilated(
+        u[..., None],                    # (B, L, C, 1) -> NHWC with W=C?
+        rhs, (1, 1), [(k - 1, 0), (0, 0)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=1) if False else _causal_conv_dw(u, w)
+    return y + b[None, None, :]
+
+
+def _causal_conv_dw(u, w):
+    """(B,L,C) depthwise causal conv, conv dims: N=B, spatial=L, feature=C."""
+    k = w.shape[0]
+    c = u.shape[-1]
+    rhs = w[:, None, :]                   # (K, 1, C): HIO with I=1 (dw)
+    return jax.lax.conv_general_dilated(
+        u, rhs, window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=c)
+
+
+def _split_proj(zxbcdt, cfg: MambaConfig):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xbc, dt
+
+
+def mamba_apply(p, xin, cfg: MambaConfig):
+    """Full-sequence forward. xin: (B,L,d_model)."""
+    bs, l, _ = xin.shape
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    zxbcdt = dense_apply(p["in_proj"], xin, qcfg=cfg.qcfg)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(xin.dtype),
+                                   p["conv_b"].astype(xin.dtype)))
+    x = constrain(xbc[..., :di].reshape(bs, l, h, pd),
+                  ("batch", None, "heads", None))
+    b = xbc[..., di:di + n]
+    c = xbc[..., di + n:]
+    b = jnp.broadcast_to(b[:, :, None, :], (bs, l, h, n))
+    c = jnp.broadcast_to(c[:, :, None, :], (bs, l, h, n))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])       # (B,L,H)
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt              # log-decay
+    # SSD einsum operands in the compute dtype (decay cumsums stay f32;
+    # einsums accumulate f32 via preferred_element_type)
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(xin.dtype)
+    # pad L to a chunk multiple; zero x-contributions keep outputs exact
+    pad = (-l) % cfg.chunk
+    if pad:
+        padt = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        xdt, a, b, c = padt(xdt), padt(a), padt(b), padt(c)
+    y, _ = _ssd_chunked(xdt, a, b.astype(xin.dtype),
+                        c.astype(xin.dtype), cfg.chunk)
+    if pad:
+        y = y[:, :l]
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = constrain(y.reshape(bs, l, di).astype(xin.dtype),
+                  ("batch", None, "mlp"))
+    y = y * jax.nn.silu(z)
+    y = _rms(y, p["norm_scale"])
+    return dense_apply(p["out_proj"], y, qcfg=cfg.qcfg)
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def mamba_init_cache(cfg: MambaConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba_decode(p, xin, cache, cfg: MambaConfig):
+    """Single-token decode. xin: (B,1,d_model). O(1) state update."""
+    bs = xin.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
+    zxbcdt = dense_apply(p["in_proj"], xin, qcfg=cfg.qcfg)
+    z, xbc, dt = _split_proj(zxbcdt[:, 0], cfg)
+    conv_buf = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    w = p["conv_w"].astype(xin.dtype)
+    xbc_c = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_buf, w) + p["conv_b"].astype(xin.dtype))
+    new_conv = conv_buf[:, 1:]
+    x = xbc_c[..., :di].reshape(bs, h, pd).astype(jnp.float32)
+    b = xbc_c[..., di:di + n].astype(jnp.float32)
+    c = xbc_c[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt)           # (B,H)
+    ssm = cache["ssm"] * a[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", x, b, dt)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, c)
+    y = y + x * p["d_skip"][None, :, None]
+    y = y.reshape(bs, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    y = _rms(y, p["norm_scale"])
+    out = dense_apply(p["out_proj"], y[:, None, :], qcfg=cfg.qcfg)
+    return out, {"conv": new_conv, "ssm": ssm}

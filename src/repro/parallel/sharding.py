@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules (MaxText-style) -> PartitionSpecs.
+
+The mesh axes are ("data", "model") per pod and ("pod", "data", "model")
+across pods. Default assignment:
+
+  batch        -> (pod, data)    DP across pods and the data axis
+  vocab/heads/kv_heads/mlp/expert_mlp/experts -> model   (TP / EP)
+  embed        -> data           ZeRO-3/FSDP: weights + optimizer states
+                                 sharded over data, all-gathered at use
+  kv_seq       -> model          SP: long-context KV cache sharding
+  layers/stack -> None           (replicated stacking dim)
+
+The PULP-cluster analogy (DESIGN.md): `model` plays the tightly-coupled
+8-core cluster (operands resident, collective-free inner loops), `data`/
+`pod` plays multi-cluster scale-out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple = (
+        ("batch", ("pod", "data")),
+        ("batch_full", ("pod", "data", "model")),
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("mlp", "model"),
+        ("mlp2", None),
+        ("expert_mlp", "model"),
+        ("experts", "model"),
+        ("embed", "data"),       # ZeRO-3 shard dim
+        ("opt_shard", ("data", "model")),  # blocked int8 optimizer states
+        ("kv_seq", "model"),     # sequence-parallel KV
+        ("seq_model", "model"),  # context-parallel fallback for few-head GQA
+        ("seq", None),
+        ("layers", None),
+    )
+
+    def lookup(self, name):
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def spec(self, axes, mesh: Mesh) -> P:
+        """logical axes tuple -> PartitionSpec, dropping mesh axes that are
+        absent or whose dim isn't divisible (validated separately)."""
+        out = []
+        used = set()
+        for ax in axes:
+            tgt = self.lookup(ax) if ax is not None else None
+            tgt_t = tgt if isinstance(tgt, tuple) else (
+                (tgt,) if tgt else ())
+            tgt_t = tuple(t for t in tgt_t
+                          if t in mesh.axis_names and t not in used)
+            used.update(tgt_t)
+            if len(tgt_t) == 0:
+                out.append(None)
+            elif len(tgt_t) == 1:
+                out.append(tgt_t[0])
+            else:
+                out.append(tgt_t)
+        return P(*out)
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def _divisible(dim: int, spec_entry, mesh: Mesh) -> bool:
+    if spec_entry is None:
+        return True
+    axes = spec_entry if isinstance(spec_entry, tuple) else (spec_entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def shard_spec_for(shape, axes, mesh: Mesh,
+                   rules: ShardingRules = DEFAULT_RULES) -> P:
+    """PartitionSpec with divisibility fallback: any mesh axis that does not
+    divide the dim is dropped (replicated) — production behaviour, never a
+    crash on odd dims."""
+    spec = rules.spec(axes, mesh)
+    fixed = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        fixed.append(entry if _divisible(dim, entry, mesh) else None)
+    return P(*fixed)
+
+
+def params_shardings(spec_tree, shape_tree, mesh: Mesh,
+                     rules: ShardingRules = DEFAULT_RULES):
+    """Map the logical-spec tree + shapes tree -> NamedSharding tree."""
+    def one(axes, shaped):
+        return NamedSharding(
+            mesh, shard_spec_for(shaped.shape, axes, mesh, rules))
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_sharding(mesh: Mesh, ndim: int,
+                   rules: ShardingRules = DEFAULT_RULES,
+                   shape=None) -> NamedSharding:
+    """Inputs: shard dim0 (batch) over (pod, data); drops axes the batch
+    dim can't divide (long_500k decode has global_batch=1)."""
+    if shape is not None:
+        spec = shard_spec_for(tuple(shape), ("batch",) + (None,) *
+                              (ndim - 1), mesh, rules)
+        return NamedSharding(mesh, spec)
+    entry = rules.spec(("batch",), mesh)
+    return NamedSharding(mesh, P(entry[0], *([None] * (ndim - 1))))
+
+
+def cache_shardings(cache_shapes, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES):
+    """KV caches: (layers, batch, seq, kv_heads, head_dim) — shard batch
+    over (pod,data) and the kv_heads dim over model; when batch or kv_heads
+    don't divide, fall back to sequence (SP) sharding for long-context."""
+    def one(s):
+        shape = s.shape
+        if len(shape) >= 4:
+            # (L, B, T, Hk, Dh) or (L, 2, B, T, Hk, Dh) cross
+            if len(shape) == 5:
+                axes = ("layers", "batch", "kv_seq_or_none", "kv_heads",
+                        None)
+                return NamedSharding(mesh, _kv_spec(shape, mesh, rules))
+            if len(shape) == 6:
+                p = _kv_spec(shape[1:], mesh, rules)
+                return NamedSharding(mesh, P(None, *tuple(p)))
+        # ssm/conv states: (L, B, ...): batch over data
+        entry = rules.spec(("batch",), mesh)[0]
+        if len(shape) >= 2 and _divisible(shape[1], entry, mesh):
+            return NamedSharding(
+                mesh, P(None, entry, *([None] * (len(shape) - 2))))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+    return jax.tree.map(one, cache_shapes)
+
+
+def _kv_spec(shape, mesh, rules):
+    """(L, B, T, Hk, Dh): prefer batch->(pod,data), heads->model; if heads
+    don't divide model, shard T (SP) instead — the long_500k path."""
+    l, b, t, hk, dh = shape
+    bent = rules.spec(("batch",), mesh)[0]
+    bent = bent if _divisible(b, bent, mesh) else None
+    ment = "model" if hk % mesh.shape.get("model", 1) == 0 else None
+    tent = None
+    if ment is None and t % mesh.shape.get("model", 1) == 0:
+        tent = "model"
+    return P(None, bent, tent, ment, None)

@@ -1,0 +1,175 @@
+"""Optimizers with ZeRO-sharded state and int8 state quantization.
+
+- AdamW: fp32 m/v, standard decoupled weight decay, global-norm clipping.
+- AdamW8: blockwise-int8 m/v (bitsandbytes-style) — a distributed-
+  optimization trick in the paper's own spirit (quantize what is
+  memory-bound): cuts optimizer HBM from 8 to ~2.06 bytes/param, which is
+  what lets the 1T-param arch train inside a 512-chip slice.
+
+Optimizer state inherits the parameter's logical axes, so ZeRO-3 sharding
+(embed->data) applies to m/v automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+BLOCK = 256  # int8 state block size
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10000
+    state_bits: int = 32          # 32 | 8 (blockwise int8 m/v)
+
+
+def _schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+# ---------------------------------------------------------- int8 states ---
+# Row-wise (last-axis) int8 quantization: codes keep the PARAM SHAPE, so
+# ZeRO sharding propagates untouched (blocked (N/256,256) layouts forced
+# param-sized f32 reshapes that GSPMD could only replicate — observed
+# 7.9 TB/device temps on the 1T arch).
+# m (signed): linear absmax-per-row.  v (non-negative, huge dynamic range):
+# LOG-scale per row — linear coding crushes small entries to 0 and the
+# 1/sqrt(v) update explodes (observed: loss 0.13 -> 1.8e4).
+
+_LOG_FLOOR = 1e-30
+
+
+def _q8_lin(x):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"codes": codes, "scale": scale[..., 0]}
+
+
+def _dq8_lin(s, shape):
+    return s["codes"].astype(jnp.float32) * s["scale"][..., None]
+
+
+def _q8_log(x):
+    lx = jnp.log(jnp.maximum(x, _LOG_FLOOR))
+    lmin = jnp.min(lx, axis=-1, keepdims=True)
+    lrange = jnp.maximum(jnp.max(lx, axis=-1, keepdims=True) - lmin, 1e-6)
+    codes = jnp.clip(jnp.round((lx - lmin) / lrange * 254.0) - 127,
+                     -127, 127).astype(jnp.int8)
+    return {"codes": codes, "lmin": lmin[..., 0], "lrange": lrange[..., 0]}
+
+
+def _dq8_log(s, shape):
+    lx = ((s["codes"].astype(jnp.float32) + 127.0) / 254.0
+          * s["lrange"][..., None] + s["lmin"][..., None])
+    x = jnp.exp(lx)
+    return jnp.where(x <= _LOG_FLOOR * 2, 0.0, x)
+
+
+def _zeros_state(p, bits, kind="lin"):
+    if bits == 8:
+        s = {"codes": jnp.zeros(p.shape, jnp.int8)}
+        lead = p.shape[:-1]
+        if kind == "lin":
+            s["scale"] = jnp.zeros(lead, jnp.float32)
+        else:
+            s["lmin"] = jnp.full(lead, jnp.log(_LOG_FLOOR), jnp.float32)
+            s["lrange"] = jnp.full(lead, 1e-6, jnp.float32)
+        return s
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def _read_state(s, shape, bits, kind="lin"):
+    if bits == 8:
+        return _dq8_lin(s, shape) if kind == "lin" else _dq8_log(s, shape)
+    return s
+
+
+def _write_state(x, bits, kind="lin"):
+    if bits == 8:
+        return _q8_lin(x) if kind == "lin" else _q8_log(x)
+    return x
+
+
+# -------------------------------------------------------------- adamw -----
+
+def adamw_init(params, cfg: OptConfig):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(
+            lambda p: _zeros_state(p, cfg.state_bits, "lin"), params),
+        "v": jax.tree.map(
+            lambda p: _zeros_state(p, cfg.state_bits, "log"), params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+
+    is_state = lambda x: isinstance(x, dict) and "codes" in x
+
+    def upd(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * scale
+        m = _read_state(m_s, p.shape, cfg.state_bits, "lin")
+        v = _read_state(v_s, p.shape, cfg.state_bits, "log")
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard practice)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, _write_state(m, cfg.state_bits, "lin"), \
+            _write_state(v, cfg.state_bits, "log")
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v)
+            for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, {
+        "grad_norm": gn, "lr": lr}
+
+
+def state_logical_specs(param_specs, cfg: OptConfig):
+    """Optimizer-state logical axes mirroring the params (ZeRO-3)."""
+    if cfg.state_bits == 8:
+        def m_axes(axes):
+            return {"codes": axes, "scale": axes[:-1]}
+        def v_axes(axes):
+            return {"codes": axes, "lmin": axes[:-1], "lrange": axes[:-1]}
+        st_m = jax.tree.map(m_axes, param_specs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        st_v = jax.tree.map(v_axes, param_specs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return {"step": (), "m": st_m, "v": st_v}
+    st = param_specs
+    return {"step": (), "m": st, "v": st}

@@ -1,0 +1,84 @@
+"""THE canonical serving test: step-by-step decode must reproduce the
+teacher-forced forward logits for every architecture family."""
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.api import build
+
+ARCHS = ["olmo_1b", "phi3_mini_3p8b", "qwen2p5_3b", "gemma3_1b",
+         "mamba2_370m", "recurrentgemma_9b", "seamless_m4t_large_v2",
+         "llama3p2_vision_90b", "kimi_k2_1t", "llama4_maverick_400b"]
+
+
+def _fill_cross_kv(cfg, model, params, batch, cache):
+    from repro.models.lm import _attn_cfg, _layer_split
+    from repro.nn.attention import cross_kv_project
+    acfg = _attn_cfg(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import encode
+        enc = encode(params, batch["src_embed"], cfg)
+        cache["cross_kv"] = jnp.stack([jnp.stack(cross_kv_project(
+            jax.tree.map(lambda a: a[l], params["dec_layers"])["xattn"],
+            enc, acfg)) for l in range(cfg.dec_layers)])
+    elif cfg.cross_every:
+        _, n_cross = _layer_split(cfg)
+        cache["cross_kv"] = jnp.stack([jnp.stack(cross_kv_project(
+            jax.tree.map(lambda a: a[l], params["cross_layers"])["xattn"],
+            batch["src_embed"], acfg)) for l in range(n_cross)])
+    return cache
+
+
+@pytest.mark.parametrize("modname", ARCHS)
+def test_decode_matches_forward(modname):
+    m = importlib.import_module(f"repro.configs.{modname}")
+    cfg = m.smoke_config()
+    over = {"compute_dtype": "float32", "kv_quant_bits": 16}
+    if cfg.moe:  # ample capacity: no train/serve drop mismatch in the test
+        over["moe"] = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    cfg = dataclasses.replace(cfg, **over)
+    model = build(cfg)
+    key = jax.random.PRNGKey(7)
+    params = model.init(key)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec" or cfg.cross_every:
+        sl = S if cfg.family == "encdec" else cfg.src_len
+        batch["src_embed"] = jax.random.normal(
+            key, (B, sl, cfg.d_model), jnp.float32) * 0.05
+    lf, _, _ = model.forward(params, batch)
+    cache = model.init_cache(B, S, jnp.float32)
+    cache = _fill_cross_kv(cfg, model, params, batch, cache)
+    errs = []
+    for t in range(S):
+        lg, cache = model.decode(params, cache, toks[:, t:t + 1],
+                                 jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32) - lf[:, t].astype(jnp.float32)))))
+    assert max(errs) < 2e-2, errs
+
+
+def test_int8_kv_cache_close():
+    """int8 KV cache decode stays close to the bf16-cache decode."""
+    m = importlib.import_module("repro.configs.qwen2p5_3b")
+    cfg = dataclasses.replace(m.smoke_config(), compute_dtype="float32")
+    cfg8 = dataclasses.replace(cfg, kv_quant_bits=8)
+    key = jax.random.PRNGKey(3)
+    model, model8 = build(cfg), build(cfg8)
+    params = model.init(key)
+    B, S = 2, 8
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    c16 = model.init_cache(B, S, jnp.float32)
+    c8 = model8.init_cache(B, S, jnp.float32)
+    assert c8["kv"]["k"].dtype == jnp.int8
+    for t in range(S):
+        l16, c16 = model.decode(params, c16, toks[:, t:t + 1], jnp.int32(t))
+        l8, c8 = model8.decode(params, c8, toks[:, t:t + 1], jnp.int32(t))
+    p16 = jax.nn.softmax(l16[:, 0].astype(jnp.float32))
+    p8 = jax.nn.softmax(l8[:, 0].astype(jnp.float32))
+    assert float(jnp.max(jnp.abs(p16 - p8))) < 0.1

@@ -1,0 +1,40 @@
+"""The multi-pod dry-run deliverable: every (arch x shape x mesh) cell has
+a compile artifact with sane roofline terms (run `python -m
+repro.launch.dryrun --all --mesh {pod,multipod}` to regenerate)."""
+import json
+import pathlib
+
+import pytest
+
+from repro.configs.base import cells_for
+from repro.models.api import list_archs
+
+DRY = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+@pytest.mark.skipif(not DRY.exists(), reason="dry-run not generated yet")
+def test_every_cell_compiled_both_meshes():
+    missing = []
+    for arch in list_archs():
+        for shape in cells_for(arch):
+            for mesh in ("pod", "multipod"):
+                f = DRY / f"{arch}__{shape.name}__{mesh}.json"
+                if not f.exists():
+                    missing.append(f.name)
+                    continue
+                r = json.loads(f.read_text())
+                t = r["roofline"]
+                assert t["compute_s"] >= 0 and t["memory_s"] > 0
+                assert r["bytes_per_device"]["total"] > 0
+                assert r["devices"] == (512 if mesh == "multipod" else 256)
+    assert not missing, missing
+
+
+@pytest.mark.skipif(not DRY.exists(), reason="dry-run not generated yet")
+def test_cell_count_matches_assignment():
+    # 10 archs x 4 shapes = 40 assigned cells; 7 long_500k skips documented
+    # in DESIGN.md -> 33 runnable cells per mesh
+    n = sum(len(cells_for(a)) for a in list_archs())
+    assert n == 33
+    skipped = 40 - n
+    assert skipped == 7

@@ -1,0 +1,44 @@
+"""HLO cost walker: trip-count multiplication and dot flops parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_costs import analyze, parse_module
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_dot_flops_exact():
+    M, K, N = 64, 128, 32
+
+    def f(a, b):
+        return a @ b
+
+    c = _compile(f, jax.ShapeDtypeStruct((M, K), jnp.float32),
+                 jax.ShapeDtypeStruct((K, N), jnp.float32))
+    mc = analyze(c.as_text())
+    assert mc.flops == 2 * M * K * N
+
+
+def test_scan_trip_count_multiplies():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    c = _compile(f, jax.ShapeDtypeStruct((8, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    mc = analyze(c.as_text())
+    assert mc.flops == 7 * 2 * 8 * 64 * 64
+
+
+def test_parse_module_structure():
+    def f(x):
+        return x * 2 + 1
+
+    c = _compile(f, jax.ShapeDtypeStruct((16,), jnp.float32))
+    comps = parse_module(c.as_text())
+    assert any(comp.is_entry for comp in comps.values())

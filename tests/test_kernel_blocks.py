@@ -1,0 +1,21 @@
+"""Property tests for the kernel's BlockSpec selection: the chosen tile
+always fits the VMEM budget and is MXU/chunk aligned (the paper's 4x4-
+layout feasibility question at the VMEM level)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.kernels.qmatmul import default_block
+
+
+@given(m=st.integers(32, 8192), n=st.integers(128, 16384),
+       k=st.integers(128, 32768),
+       a_bits=st.sampled_from([8, 4, 2]), w_bits=st.sampled_from([8, 4, 2]))
+@settings(max_examples=100, deadline=None)
+def test_default_block_fits_vmem(m, n, k, a_bits, w_bits):
+    budget = 8 * 1024 * 1024
+    bm, bn, bk = default_block(m, n, k, a_bits, w_bits, budget)
+    pf_a, pf_w = 8 // a_bits, 8 // w_bits
+    work = 2 * (bm * (bk // pf_a) + (bk // pf_w) * bn) + 2 * bm * bn * 4
+    assert work <= budget
+    assert bk % packing.CHUNK == 0
+    assert bm >= 32 and bn >= 128

@@ -1,0 +1,27 @@
+"""CLI launchers run end-to-end (subprocess smoke)."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(args):
+    return subprocess.run(
+        [sys.executable, "-m"] + args, cwd=ROOT, capture_output=True,
+        text=True, timeout=500,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+
+
+def test_train_cli(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "olmo-1b", "--smoke",
+              "--steps", "6", "--batch", "2", "--seq", "16",
+              "--ckpt", str(tmp_path)])
+    assert "final step 6" in r.stdout, r.stderr[-1500:]
+
+
+def test_serve_cli():
+    r = _run(["repro.launch.serve", "--arch", "qwen2.5-3b", "--smoke",
+              "--quant", "w4a8", "--requests", "2", "--batch", "2",
+              "--max-new", "4"])
+    assert "tok/s" in r.stdout, r.stderr[-1500:]

@@ -1,0 +1,66 @@
+"""Pack/unpack round-trips + chunk-planar order invariants (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+@pytest.mark.parametrize("signed", [True, False])
+def test_roundtrip(bits, signed, rng):
+    lo, hi = packing.int_range(bits, signed)
+    x = rng.integers(lo, hi + 1, size=(3, 4, 256)).astype(np.int8)
+    p = packing.pack(jnp.asarray(x), bits, axis=-1)
+    u = packing.unpack(p, bits, signed, axis=-1)
+    assert np.array_equal(np.asarray(u), x)
+    if bits != 8:
+        assert p.shape[-1] == 256 // packing.pack_factor(bits)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+@pytest.mark.parametrize("axis", [0, 1, -1])
+def test_roundtrip_axes(bits, axis, rng):
+    lo, hi = packing.int_range(bits, True)
+    x = rng.integers(lo, hi + 1, size=(256, 256, 2)).astype(np.int8)
+    if x.shape[axis] % packing.CHUNK:
+        pytest.skip("axis not chunk aligned")
+    p = packing.pack(jnp.asarray(x), bits, axis=axis)
+    u = packing.unpack(p, bits, True, axis=axis)
+    assert np.array_equal(np.asarray(u), x)
+
+
+@given(bits=st.sampled_from([4, 2]), signed=st.booleans(),
+       n_chunks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_property(bits, signed, n_chunks, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = packing.int_range(bits, signed)
+    x = rng.integers(lo, hi + 1,
+                     size=(packing.CHUNK * n_chunks,)).astype(np.int8)
+    p = packing.pack(jnp.asarray(x), bits, axis=-1)
+    u = packing.unpack(p, bits, signed, axis=-1)
+    assert np.array_equal(np.asarray(u), x)
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_planar_order_matches_perm(bits, rng):
+    """unpack_planes concat order == planar_perm of logical order."""
+    k = 2 * packing.CHUNK
+    lo, hi = packing.int_range(bits, True)
+    x = rng.integers(lo, hi + 1, size=(k,)).astype(np.int8)
+    p = packing.pack(jnp.asarray(x), bits, axis=-1)
+    planes = packing.unpack_planes(jnp.asarray(p), bits, True)
+    pf = packing.pack_factor(bits)
+    sub = packing.CHUNK // pf
+    planar = np.stack([np.asarray(pl).reshape(-1, sub) for pl in planes],
+                      axis=1).reshape(-1)
+    assert np.array_equal(planar, x[packing.planar_perm(k, bits)])
+
+
+def test_pad_to_chunk():
+    x = jnp.ones((3, 200), jnp.int8)
+    y = packing.pad_to_chunk(x, axis=-1)
+    assert y.shape == (3, 256)
+    assert int(y[:, 200:].sum()) == 0

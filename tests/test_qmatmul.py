@@ -1,0 +1,125 @@
+"""Pallas packed GEMM vs numpy oracle: bit-exact across shapes/dtypes.
+
+Per the deliverable: for each kernel, sweep shapes/dtypes and
+assert_allclose (here: exact equality — integer kernels) against the
+ref.py oracle.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.kernels.qmatmul import (qmatmul_packed, qmatmul_ref, qmatmul_jnp,
+                                   qlinear_apply)
+from repro.core import (QuantSpec, quantize, quantize_linear,
+                        calibrate_weight, calibrate_activation)
+
+
+def _mk(rng, bits, signed, shape, axis):
+    lo, hi = packing.int_range(bits, signed)
+    x = rng.integers(lo, hi + 1, size=shape).astype(np.int8)
+    return packing.pack(jnp.asarray(x), bits, axis=axis)
+
+
+BITS = [(8, 8), (8, 4), (8, 2), (4, 4), (4, 8), (2, 2), (4, 2), (2, 4),
+        (2, 8)]
+
+
+@pytest.mark.parametrize("ab,wb", BITS)
+@pytest.mark.parametrize("signed_a", [False, True])
+def test_kernel_bit_exact(ab, wb, signed_a, rng):
+    M, K, N = 64, 512, 256
+    xp = _mk(rng, ab, signed_a, (M, K), -1)
+    wp = _mk(rng, wb, True, (K, N), 0)
+    kappa = rng.integers(-127, 128, size=(N,)).astype(np.int32)
+    lam = rng.integers(-2**20, 2**20, size=(N,)).astype(np.int32)
+    m = rng.integers(0, 2**15, size=(N,)).astype(np.int32)
+    kw = dict(a_bits=ab, a_signed=signed_a, w_bits=wb, d=20, out_bits=4,
+              epilogue="int")
+    want = qmatmul_ref(np.asarray(xp), np.asarray(wp), kappa, lam, m, **kw)
+    got = qmatmul_packed(xp, wp, jnp.asarray(kappa), jnp.asarray(lam),
+                         jnp.asarray(m), block=(32, 128, 256),
+                         interpret=True, **kw)
+    assert np.array_equal(np.asarray(got), want)
+    got_j = qmatmul_jnp(xp, wp, jnp.asarray(kappa), jnp.asarray(lam),
+                        jnp.asarray(m), **kw)
+    assert np.array_equal(np.asarray(got_j), want)
+
+
+@pytest.mark.parametrize("shape", [(32, 128, 128), (96, 384, 128),
+                                   (64, 1024, 512)])
+@pytest.mark.parametrize("block", [(32, 128, 128), (32, 128, 384)])
+def test_kernel_shape_sweep(shape, block, rng):
+    M, K, N = shape
+    if K % block[2]:
+        pytest.skip("K not multiple of bk")
+    xp = _mk(rng, 4, False, (M, K), -1)
+    wp = _mk(rng, 4, True, (K, N), 0)
+    kappa = rng.integers(-64, 64, size=(N,)).astype(np.int32)
+    lam = rng.integers(-2**16, 2**16, size=(N,)).astype(np.int32)
+    m = rng.integers(0, 2**15, size=(N,)).astype(np.int32)
+    kw = dict(a_bits=4, a_signed=False, w_bits=4, d=18, out_bits=8,
+              epilogue="int")
+    want = qmatmul_ref(np.asarray(xp), np.asarray(wp), kappa, lam, m, **kw)
+    got = qmatmul_packed(xp, wp, jnp.asarray(kappa), jnp.asarray(lam),
+                         jnp.asarray(m), block=block, interpret=True, **kw)
+    assert np.array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("epi", ["raw", "dequant"])
+def test_other_epilogues(epi, rng):
+    M, K, N = 32, 256, 128
+    xp = _mk(rng, 8, True, (M, K), -1)
+    wp = _mk(rng, 4, True, (K, N), 0)
+    z = jnp.zeros((N,), jnp.int32)
+    kw = dict(a_bits=8, a_signed=True, w_bits=4, d=16, out_bits=8,
+              epilogue=epi, scale=0.25)
+    want = qmatmul_ref(np.asarray(xp), np.asarray(wp), z, z, z, **kw)
+    got = qmatmul_packed(xp, wp, z, z, z, block=(32, 128, 256),
+                         interpret=True, **kw)
+    if epi == "raw":
+        assert np.array_equal(np.asarray(got), want)
+    else:
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=1e-2)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       ab=st.sampled_from([8, 4, 2]), wb=st.sampled_from([8, 4, 2]),
+       d=st.integers(16, 26))
+@settings(max_examples=25, deadline=None)
+def test_kernel_property(seed, ab, wb, d):
+    rng = np.random.default_rng(seed)
+    M, K, N = 32, 256, 128
+    xp = _mk(rng, ab, False, (M, K), -1)
+    wp = _mk(rng, wb, True, (K, N), 0)
+    kappa = rng.integers(-127, 128, size=(N,)).astype(np.int32)
+    lam = rng.integers(-2**18, 2**18, size=(N,)).astype(np.int32)
+    m = rng.integers(0, 2**15, size=(N,)).astype(np.int32)
+    kw = dict(a_bits=ab, a_signed=False, w_bits=wb, d=d, out_bits=8,
+              epilogue="int")
+    want = qmatmul_ref(np.asarray(xp), np.asarray(wp), kappa, lam, m, **kw)
+    got = qmatmul_packed(xp, wp, jnp.asarray(kappa), jnp.asarray(lam),
+                         jnp.asarray(m), block=(32, 128, 128),
+                         interpret=True, **kw)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_qlinear_apply_odd_shapes(rng):
+    """ops.py wrapper: odd M/K/N with padding; calibrated params."""
+    K, N, M = 288, 64, 50   # the paper's im2col K
+    w = rng.normal(size=(K, N)).astype(np.float32) * 0.05
+    x = np.maximum(rng.normal(size=(M, K)), 0).astype(np.float32) * 0.5
+    bn_s = rng.normal(size=(N,)).astype(np.float32) * 0.1 + 1
+    bn_b = rng.normal(size=(N,)).astype(np.float32) * 0.01
+    sw = calibrate_weight(jnp.asarray(w), 4)
+    sx = calibrate_activation(x, 4, 100.0)
+    y_f = np.maximum((x @ w) * bn_s + bn_b, 0)
+    sy = calibrate_activation(y_f, 4, 100.0)
+    qp = quantize_linear(jnp.asarray(w), sw, bn_s, bn_b, sx, sy)
+    xq = quantize(jnp.asarray(x), sx)
+    yk = qlinear_apply(qp, xq, use_kernel=True)
+    yj = qlinear_apply(qp, xq, use_kernel=False)
+    assert np.array_equal(np.asarray(yk), np.asarray(yj))
+    assert yk.shape == (M, N)

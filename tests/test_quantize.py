@@ -1,0 +1,68 @@
+"""Integer-image algebra: requant exactness, spec math, BN folding."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QuantSpec, quantize, dequantize, requantize_shift,
+                        requantize_shift_i64, fold_bn_requant, lin,
+                        batchnorm_int, qnt_act, quantize_linear,
+                        calibrate_weight, calibrate_activation, M_BITS)
+from repro.core import packing
+
+
+@given(phi=st.integers(-2**31, 2**31 - 1), m=st.integers(0, 2**15 - 1),
+       d=st.integers(16, 31))
+@settings(max_examples=300, deadline=None)
+def test_requant_exact_vs_int64(phi, m, d):
+    """The kernel's int32 split == the int64 oracle for every d in [16,31].
+    This is the bit-exactness guarantee of eq. (4)."""
+    got = int(np.asarray(requantize_shift(jnp.int32(phi), jnp.int32(m), d)))
+    want = int(requantize_shift_i64(phi, m, d))
+    assert got == want
+
+
+def test_quantspec_signed_symmetric():
+    s = QuantSpec.weight(4, 1.0)
+    assert s.int_min == -7 and s.int_max == 7
+    assert abs(s.eps - 1.0 / 7) < 1e-9
+    s2 = QuantSpec.weight(2, 1.0)   # 2-bit signed == ternary
+    assert (s2.int_min, s2.int_max) == (-1, 1)
+
+
+def test_quantize_dequantize_error_bound(rng):
+    for bits in (8, 4, 2):
+        s = QuantSpec.activation(bits, 4.0)
+        x = rng.uniform(0, 4.0, size=(1000,)).astype(np.float32)
+        q = quantize(jnp.asarray(x), s)
+        err = np.abs(np.asarray(dequantize(q, s)) - x)
+        assert err.max() <= s.eps / 2 + 1e-6
+
+
+def test_fold_bn_requant_constraints(rng):
+    bn_s = rng.normal(size=(32,)).astype(np.float32) * 0.2 + 1
+    bn_b = rng.normal(size=(32,)).astype(np.float32) * 0.1
+    kappa, lam, m, d = fold_bn_requant(0.01, 0.02, 0.05, bn_s, bn_b, 4)
+    assert 16 <= d <= 31
+    assert int(jnp.max(m)) < (1 << M_BITS)
+
+
+def test_full_integer_pipeline_close_to_float(rng):
+    K, N, M = 256, 64, 32
+    w = rng.normal(size=(K, N)).astype(np.float32) * 0.05
+    x = np.maximum(rng.normal(size=(M, K)), 0).astype(np.float32)
+    bn_s = rng.normal(size=(N,)).astype(np.float32) * 0.1 + 1
+    bn_b = rng.normal(size=(N,)).astype(np.float32) * 0.01
+    sw = calibrate_weight(jnp.asarray(w), 8)
+    sx = calibrate_activation(x, 8, 100.0)
+    y_f = np.maximum((x @ w) * bn_s + bn_b, 0)
+    sy = calibrate_activation(y_f, 8, 100.0)
+    qp = quantize_linear(jnp.asarray(w), sw, bn_s, bn_b, sx, sy)
+    xq = quantize(jnp.asarray(x), sx)
+    xq = packing.pad_to_chunk(xq, axis=-1)
+    w_unp = packing.unpack(qp.w_packed, 8, True, axis=0)
+    phi = lin(w_unp, xq)
+    yq = qnt_act(batchnorm_int(phi, qp.kappa, qp.lam), qp.m, qp.d, 8)
+    y_int = np.asarray(dequantize(yq, sy))
+    rel = np.abs(y_int - np.clip(y_f, 0, sy.beta)).max() / (y_f.max() + 1e-9)
+    assert rel < 0.05  # 8-bit end-to-end error
