@@ -1,9 +1,13 @@
 """Fig. 11/12 analogue — the paper's two conv layers at 8/4/2-bit,
-MatMul-only vs full conv (+BN/QNT), kernel-vs-jnp path.
+MatMul-only vs full conv (+BN/QNT), fused-vs-explicit im2col path.
 
-Paper layers: 16x16x32 and 32x32x32 inputs, 64x3x3x32 filters. We run the
-actual Pallas kernel (interpret mode: correctness + structure; wall time on
-CPU is not TPU-predictive) and report the v5e roofline projection alongside
+Paper layers: 16x16x32 and 32x32x32 inputs, 64x3x3x32 filters. The `_full`
+rows run the fused implicit-GEMM Pallas kernel (qconv2d_fused: in-kernel
+receptive-field gather, no HBM im2col tensor — the PULP-NN/Mac&Load
+execution model); the `_matmul_only` rows time the packed GEMM alone on a
+pre-materialized XLA im2col, isolating the gather+epilogue cost. Interpret
+mode: correctness + structure; wall time on CPU is not TPU-predictive — we
+report the v5e roofline projection alongside
 — the projection carries the paper's headline structure: sub-byte cuts the
 memory term ~linearly in bitwidth, and the fused epilogue removes the
 separate quantization pass whose relative cost GROWS as bits shrink

@@ -1,6 +1,8 @@
 """The paper's benchmark: conv layers (16x16x32 and 32x32x32 inputs,
-64x3x3x32 filters) at 8/4/2-bit, full integer pipeline (im2col -> packed
-MatMul -> BN -> QNT/ACT), kernel path vs jnp path bit-exact.
+64x3x3x32 filters) at 8/4/2-bit, full integer pipeline (implicit-GEMM
+gather -> packed MatMul -> BN -> QNT/ACT). The kernel path is the fused
+implicit-GEMM Pallas kernel (no HBM im2col tensor); the jnp path is the
+explicit im2col + pure-jnp GEMM fallback — bit-exact against each other.
 
     PYTHONPATH=src python examples/paper_conv_layer.py
 """
@@ -32,5 +34,5 @@ for H, W in [(16, 16), (32, 32)]:
         wbytes = qp.gemm.w_packed.size
         print(f"conv {H}x{W}x32 {bits}-bit: out {tuple(yk.shape)} "
               f"{macs} MACs, packed weights {wbytes}B "
-              f"({8 // bits}x compression), kernel==jnp BIT-EXACT")
+              f"({8 // bits}x compression), fused==im2col BIT-EXACT")
 print("paper pipeline reproduced (see benchmarks/fig11 for perf terms)")

@@ -1,0 +1,213 @@
+"""Shared machinery for the packed sub-byte Pallas kernels.
+
+Both integer kernels (qmatmul: packed GEMM, qconv: fused implicit-GEMM
+conv) run the same per-tile pipeline from the paper:
+
+    unpack(W, X) -> int8        (nibble/crumb SIMD operands, Table II)
+    int8 x int8 -> int32 MXU    (pv.sdotp: sum-of-dot-product, eq. 2)
+    kappa*acc + lambda          (integer batch-norm, eq. 3)
+    (m * .) >> d, clip          (QNT/ACT, eq. 4)  [epilogue='int']
+
+This module holds the pieces they share: the chunk-planar plane splitter
+(`subsplit`), the planar sub-byte dot product (`matmul_planes`), the three
+epilogues (`apply_epilogue`, int / dequant / raw), and block-shape
+selection for both the GEMM grid (`default_block`) and the conv grid
+(`conv_default_block`).
+
+Field extraction is elementwise (shift+mask on int8 containers), so a
+plane of a packed block keeps the block's shape; planes of X pair
+one-to-one with planes of W because both sides use the same chunk-planar
+logical K order and integer accumulation is order-invariant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packing
+from repro.core.quantize import requantize_shift
+
+# int8 MXU-friendly minimum tile: (32, 128); accumulate in int32.
+LANE = 128
+SUBLANE_I8 = 32
+
+EPILOGUES = ("int", "dequant", "raw")
+EPILOGUE_DTYPES = {"int": jnp.int8, "dequant": jnp.bfloat16, "raw": jnp.int32}
+
+# jax 0.4.x names the TPU compiler-params struct TPUCompilerParams; newer
+# releases renamed it CompilerParams. Resolve once here so every kernel
+# works against either.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    return _COMPILER_PARAMS(**kwargs)
+
+
+def round_up(x: int, mult: int) -> int:
+    return x + (-x) % mult
+
+
+def subsplit(planes, factor, axis):
+    """Split coarse chunk-planes into `factor`-finer planes along `axis`.
+
+    A plane of a pf-packed operand covers, per chunk, a contiguous logical
+    run of R = CHUNK // pf elements; the finer layout needs runs of
+    R // factor. Chunk order is shared, so this is a pure static reshape.
+    Fine plane q = p_coarse * factor + f.
+    """
+    if factor == 1:
+        return planes
+    pf_coarse = len(planes)
+    run = packing.CHUNK // pf_coarse
+    fine_run = run // factor
+    out = []
+    for p in planes:
+        if axis == 0:
+            k, n = p.shape
+            q = p.reshape(k // run, factor, fine_run, n)
+            out.extend(q[:, f].reshape(k // factor, n) for f in range(factor))
+        else:
+            m, k = p.shape
+            q = p.reshape(m, k // run, factor, fine_run)
+            out.extend(q[:, :, f].reshape(m, k // factor)
+                       for f in range(factor))
+    return out
+
+
+def matmul_planes(x_block, w_block, a_bits, a_signed, w_bits):
+    """Planar sub-byte dot product -> (bm, bn) int32 partial sum.
+
+    x_block: (bm, bk/pf_a) packed containers, K along axis 1.
+    w_block: (bk/pf_w, bn) packed containers, K along axis 0.
+    Both sides must share the chunk-planar logical K order.
+    """
+    pf_a = packing.pack_factor(a_bits)
+    pf_w = packing.pack_factor(w_bits)
+    x_planes = packing.unpack_planes(x_block, a_bits, a_signed)
+    w_planes = packing.unpack_planes(w_block, w_bits, True)  # weights signed
+
+    pf = max(pf_a, pf_w)
+    x_planes = subsplit(x_planes, pf // pf_a, axis=1)
+    w_planes = subsplit(w_planes, pf // pf_w, axis=0)
+
+    acc = None
+    for xp, wp in zip(x_planes, w_planes):
+        part = jax.lax.dot_general(
+            xp, wp, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc
+
+
+def apply_epilogue(acc, kappa, lam, m_mul, *, d: int, out_bits: int,
+                   epilogue: str, scale: float, out_dtype):
+    """Fused epilogue on an int32 accumulator tile.
+
+    'int':     eq.(3) integer BN (per out-channel) then eq.(4) requant+clip.
+    'dequant': float rescale (QAT-style inspection path).
+    'raw':     int32 accumulators, no epilogue.
+    kappa/lam/m_mul broadcast against acc along the lane (out-channel) dim.
+    """
+    if epilogue == "int":
+        phi_p = acc * kappa + lam
+        y = requantize_shift(phi_p, m_mul, d)
+        hi = packing.int_range(out_bits, False)[1]
+        return jnp.clip(y, 0, hi).astype(out_dtype)
+    if epilogue == "dequant":
+        return (acc.astype(jnp.float32) * scale).astype(out_dtype)
+    return acc.astype(out_dtype)  # 'raw'
+
+
+def default_block(m, n, k, a_bits, w_bits,
+                  vmem_budget: int = 8 * 1024 * 1024):
+    """Pick GEMM (bm, bn, bk): MXU-aligned, chunk-aligned, VMEM-bounded.
+
+    The paper's 4x2 -> 4x4 register-tiling exploration becomes this block
+    shape selection; benchmarks/fig8 measures the ladder.
+    """
+    def align(v, unit):
+        return max(unit, (v // unit) * unit)
+
+    bm = align(min(m, 256), SUBLANE_I8)
+    bn = align(min(n, 512), LANE)
+    bk = align(min(k, 1024), packing.CHUNK)
+    pf_a, pf_w = packing.pack_factor(a_bits), packing.pack_factor(w_bits)
+
+    def fits(bm, bn, bk):
+        x_b = bm * (bk // pf_a)
+        w_b = (bk // pf_w) * bn
+        io = bm * bn * 4 * 2  # acc scratch + out block
+        return 2 * (x_b + w_b) + io <= vmem_budget
+
+    while not fits(bm, bn, bk) and bk > packing.CHUNK:
+        bk //= 2
+    while not fits(bm, bn, bk) and bn > LANE:
+        bn //= 2
+    while not fits(bm, bn, bk) and bm > SUBLANE_I8:
+        bm //= 2
+    return bm, bn, bk
+
+
+def conv_working_set(bho, bn, *, ho, wo, cout, fh, fw, cin_pad, stride,
+                     a_bits, w_bits):
+    """VMEM bytes the fused conv kernel needs for a (bho, bn) tile.
+
+    Counts the double-buffered pipeline blocks (full packed image, weight
+    panel, epilogue params, output tile) plus the single-buffered im2col
+    scratch and the int32 accumulator. Uses a safe upper bound for the
+    padded image extent (the wrapper pads rows so every tile's receptive
+    field is in-bounds).
+    """
+    pf_a = packing.pack_factor(a_bits)
+    pf_w = packing.pack_factor(w_bits)
+    cp = cin_pad // pf_a
+    kp = fh * fw * cin_pad // pf_w
+    n_tiles = -(-ho // bho)
+    hp = n_tiles * bho * stride + fh          # >= (ho_pad-1)*s + fh
+    wp = wo * stride + fw                     # >= (wo-1)*s + fw
+    bm = bho * wo
+    img = hp * wp * cp                        # packed int8 image block
+    w_b = kp * bn                             # packed weight panel
+    params = 3 * bn * 4                       # kappa/lam/m blocks
+    out = bm * bn * 4                         # out tile (<= int32)
+    col = bm * fh * fw * cp                   # im2col VMEM scratch (NN-RF)
+    acc = bm * bn * 4                         # int32 accumulator
+    return 2 * (img + w_b + params + out) + col + acc
+
+
+def conv_default_block(n, ho, wo, cout, fh, fw, cin_pad, stride,
+                       a_bits, w_bits, vmem_budget: int = 8 * 1024 * 1024):
+    """Pick the fused conv tile (bho, bn): the M dim of the implicit GEMM
+    is the flattened output-pixel axis N*Ho*Wo, tiled as (batch image) x
+    (bho output rows x all Wo columns); the N dim is Cout tiled by bn.
+
+    Invariants (property-tested): bn is a LANE multiple, the per-tap
+    contraction run cin_pad is a CHUNK multiple (so every tap of the
+    im2col scratch stays chunk-planar aligned), ceil(ho/bho) tiles cover a
+    ragged Ho, and the whole working set fits `vmem_budget`.
+    """
+    if cin_pad % packing.CHUNK:
+        raise ValueError(f"cin_pad={cin_pad} not a CHUNK multiple")
+    bn = max(LANE, min(round_up(cout, LANE), 4 * LANE))
+    # target bm = bho*wo around 256 output pixels, at least one row
+    bho = max(1, min(ho, 256 // max(wo, 1)))
+
+    def fits(bho, bn):
+        return conv_working_set(
+            bho, bn, ho=ho, wo=wo, cout=cout, fh=fh, fw=fw,
+            cin_pad=cin_pad, stride=stride, a_bits=a_bits,
+            w_bits=w_bits) <= vmem_budget
+
+    while not fits(bho, bn) and bho > 1:
+        bho = max(1, bho // 2)
+    while not fits(bho, bn) and bn > LANE:
+        bn //= 2
+    if not fits(bho, bn):
+        raise ValueError(
+            f"fused conv tile (bho=1, bn={LANE}) exceeds the VMEM budget "
+            f"for image ho={ho} wo={wo} cin_pad={cin_pad}; use the im2col "
+            f"fallback (use_kernel=False) for images this large")
+    return bho, bn

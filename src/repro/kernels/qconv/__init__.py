@@ -1,3 +1,5 @@
 from repro.kernels.qconv.ops import (im2col_hwc, quantize_conv,
                                      qconv2d_apply, QuantizedConvParams)
+from repro.kernels.qconv.kernel import qconv2d_fused
 from repro.kernels.qconv.ref import qconv2d_ref
+from repro.kernels.common import conv_default_block

@@ -1,0 +1,177 @@
+"""Fused implicit-GEMM quantized conv — the PULP-NN execution model in one
+Pallas kernel (paper §III-C; PULP-NN, arXiv:1908.11263).
+
+PULP-NN convolves by interleaving an im2col of each output tile's receptive
+fields into the NN register file with the MatMul + BN + QNT/ACT pipeline,
+so the loads ride behind the MACs (Mac&Load) and no HBM-resident im2col
+tensor ever exists. This kernel reproduces that structure on TPU:
+
+  * the packed HWC input image is the only activation tensor in HBM;
+  * per grid step the kernel *gathers* the receptive fields of a
+    (bho output rows x Wo columns) tile directly out of the image block —
+    one strided slice per filter tap (dy, dx) — into a VMEM scratch buffer
+    that plays the NN-RF/im2col-buffer role;
+  * the planar sub-byte dot product (repro.kernels.common.matmul_planes)
+    then contracts the whole fh*fw*Cin_pad axis against the packed weight
+    panel on the MXU, and the eq.(3)/(4) integer BN + requant epilogue is
+    applied before the tile is written back.
+
+Because the gather happens between pipelined MXU invocations of adjacent
+grid steps, the Pallas grid pipeliner overlaps it with compute exactly the
+way Mac&Load hides the pointer-walk loads of the RISC-V core.
+
+Layout: the implicit GEMM is (N*Ho*Wo, fh*fw*Cin_pad) @ (fh*fw*Cin_pad,
+Cout). Cin is padded per-tap to a CHUNK multiple so every tap's channel
+run is chunk-planar packable on its own (zero padding == zero MACs); the
+weight panel uses the matching per-tap layout built by
+`quantize_conv` (`w_packed_fused`). The grid is (N, ceil(Ho/bho),
+Cout_pad/bn) — each step owns its full contraction; the cout dim is
+innermost and 'arbitrary' so the gathered scratch is reused across cout
+panels instead of re-gathered.
+
+Sizing: the whole packed image is one VMEM block (IoT-scale images — the
+paper's layers are 16x16/32x32 — fit trivially); `conv_default_block`
+checks the budget and raises for images that would not fit, in which case
+the HBM im2col fallback (`qconv2d_apply(use_kernel=False)`) applies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packing
+from repro.kernels.common import (EPILOGUE_DTYPES, apply_epilogue,
+                                  compiler_params, conv_default_block,
+                                  matmul_planes, round_up)
+
+
+def _qconv_kernel(x_ref, w_ref, kappa_ref, lam_ref, m_ref, o_ref, col_ref,
+                  *, fh: int, fw: int, stride: int, bho: int, wo: int,
+                  cp: int, a_bits: int, a_signed: bool, w_bits: int,
+                  d: int, out_bits: int, epilogue: str, scale: float):
+    """One grid step: implicit-GEMM for (bho x wo) output pixels.
+
+    x_ref:   (Hp, Wp, cp) whole packed image (cp = cin_pad/pf_a; batch dim
+             squeezed by the BlockSpec).
+    w_ref:   (fh*fw*cin_pad/pf_w, bn) packed weight panel, tap-major K.
+    col_ref: (bho*wo, fh*fw*cp) VMEM scratch — the NN-RF/im2col buffer.
+    o_ref:   (bho, wo, bn) output tile (batch dim squeezed).
+    """
+    i = pl.program_id(1)
+    r0 = i * bho * stride  # first input row of this tile's receptive field
+    rows_span = (bho - 1) * stride + 1
+    cols_span = (wo - 1) * stride + 1
+
+    # im2col gather: one strided slice per filter tap, written to the
+    # tap's chunk-aligned column run of the scratch buffer. The scratch
+    # depends only on (b, i); with the cout dim innermost ('arbitrary', so
+    # the scratch persists across j steps) the gather runs once per output
+    # tile, not once per cout panel.
+    @pl.when(pl.program_id(2) == 0)
+    def _gather():
+        for dy in range(fh):
+            for dx in range(fw):
+                patch = pl.load(
+                    x_ref,
+                    (pl.dslice(r0 + dy, rows_span),
+                     pl.dslice(dx, cols_span), slice(None)))
+                patch = patch[::stride, ::stride]      # (bho, wo, cp)
+                t = dy * fw + dx
+                col_ref[:, t * cp:(t + 1) * cp] = patch.reshape(
+                    bho * wo, cp)
+
+    # MatMul + BN + QNT/ACT on the gathered tile (full K, one pass).
+    acc = matmul_planes(col_ref[...], w_ref[...], a_bits, a_signed, w_bits)
+    y = apply_epilogue(
+        acc, kappa_ref[...], lam_ref[...], m_ref[...],
+        d=d, out_bits=out_bits, epilogue=epilogue, scale=scale,
+        out_dtype=o_ref.dtype)
+    o_ref[...] = y.reshape(bho, wo, -1)
+
+
+def qconv2d_fused(x_hat, w_packed_fused, kappa, lam, m_mul, *,
+                  fh: int, fw: int, stride: int, padding: int,
+                  cin_pad: int, cout: int,
+                  a_bits: int, a_signed: bool, w_bits: int,
+                  d: int, out_bits: int, epilogue: str = "int",
+                  scale: float = 1.0,
+                  block: Optional[tuple] = None,
+                  out_dtype=None,
+                  interpret: bool = True):
+    """Fused implicit-GEMM conv on integer images.
+
+    x_hat: (N, H, W, Cin) int8 integer images (unpacked). Spatial and
+    channel padding plus sub-byte packing happen here; the Pallas kernel
+    sees only the packed image. w_packed_fused is the per-tap-padded
+    packed weight panel from `quantize_conv` (K = fh*fw*cin_pad,
+    tap-major). Returns (N, Ho, Wo, Cout).
+    """
+    n, h, w_, cin = x_hat.shape
+    assert cin <= cin_pad and cin_pad % packing.CHUNK == 0, (cin, cin_pad)
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w_ + 2 * padding - fw) // stride + 1
+    assert ho > 0 and wo > 0, (ho, wo)
+    pf_a = packing.pack_factor(a_bits)
+    pf_w = packing.pack_factor(w_bits)
+    cp = cin_pad // pf_a
+    kp = fh * fw * cin_pad // pf_w
+    assert w_packed_fused.shape[0] == kp, (w_packed_fused.shape, kp)
+
+    if block is None:
+        block = conv_default_block(n, ho, wo, cout, fh, fw, cin_pad,
+                                   stride, a_bits, w_bits)
+    bho, bn = block
+    bho = min(bho, ho)
+    n_ho = -(-ho // bho)
+    ho_pad = n_ho * bho
+
+    # Spatial pad: `padding` zeros on top/left, and enough rows/cols below
+    # so even the ragged last row tile's receptive field stays in bounds
+    # (the extra rows are zeros; their outputs are sliced off).
+    hp = max(h + 2 * padding, (ho_pad - 1) * stride + fh)
+    wp = max(w_ + 2 * padding, (wo - 1) * stride + fw)
+    x = jnp.pad(x_hat, ((0, 0),
+                        (padding, hp - h - padding),
+                        (padding, wp - w_ - padding),
+                        (0, cin_pad - cin)))
+    xp = packing.pack(x, a_bits, axis=-1)  # (N, hp, wp, cp)
+
+    cout_pad = round_up(cout, bn)
+    wpk = jnp.pad(w_packed_fused, ((0, 0), (0, cout_pad - cout)))
+    kappa2 = jnp.pad(kappa.reshape(1, -1), ((0, 0), (0, cout_pad - cout)))
+    lam2 = jnp.pad(lam.reshape(1, -1), ((0, 0), (0, cout_pad - cout)))
+    mm2 = jnp.pad(m_mul.reshape(1, -1), ((0, 0), (0, cout_pad - cout)))
+
+    if out_dtype is None:
+        out_dtype = EPILOGUE_DTYPES[epilogue]
+
+    kernel = functools.partial(
+        _qconv_kernel, fh=fh, fw=fw, stride=stride, bho=bho, wo=wo, cp=cp,
+        a_bits=a_bits, a_signed=a_signed, w_bits=w_bits, d=d,
+        out_bits=out_bits, epilogue=epilogue, scale=scale)
+
+    grid = (n, n_ho, cout_pad // bn)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, hp, wp, cp), lambda b, i, j: (b, 0, 0, 0)),
+            pl.BlockSpec((kp, bn), lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bho, wo, bn),
+                               lambda b, i, j: (b, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, ho_pad, wo, cout_pad), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bho * wo, fh * fw * cp), jnp.int8)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, wpk, kappa2, lam2, mm2)
+    return out[:, :ho, :, :cout]

@@ -1,11 +1,24 @@
-"""Quantized HWC convolution = im2col + packed sub-byte GEMM (paper §III-C).
+"""Quantized HWC convolution (paper §III-C) — fused implicit-GEMM by default.
 
-PULP-NN's execution model is reproduced structurally: an im2col transform
-arranges each output pixel's receptive field (F*F*Cin contiguous, HWC
-layout) into a GEMM row, then the MatMul + BN + QNT/ACT pipeline runs as one
-fused kernel (repro.kernels.qmatmul). On TPU the im2col is pure data
-movement the XLA compiler folds into the surrounding program; the compute
-hot-spot is the packed GEMM.
+The conv is the implicit GEMM (N*Ho*Wo, fh*fw*Cin) @ (fh*fw*Cin, Cout).
+`use_kernel=True` (default) runs `repro.kernels.qconv.kernel.qconv2d_fused`:
+the PULP-NN execution model inside one Pallas kernel — receptive fields are
+gathered from the packed HWC image straight into a VMEM scratch buffer (the
+NN-RF/im2col-buffer analogue), then MatMul + BN + QNT/ACT run on the tile
+with no HBM-resident im2col tensor, so the gather loads hide behind the MXU
+the way Mac&Load hides loads behind MACs.
+
+`use_kernel=False` keeps the original explicit route: an XLA im2col
+(`im2col_hwc`) materializes the column tensor, then the pure-jnp packed
+GEMM consumes it. Both routes share the quantization artifact and are
+bit-identical; the fallback also covers images too large for the fused
+kernel's whole-image VMEM block.
+
+Weights are packed twice at quantization time (a few KB each at IoT scale):
+the flat im2col layout (K = fh*fw*cin padded once at the tail) for the
+fallback, and the per-tap layout (each tap's Cin padded to a CHUNK multiple
+independently, K = fh*fw*cin_pad, tap-major) the fused gather needs so every
+receptive-field slice stays chunk-planar aligned.
 """
 from __future__ import annotations
 
@@ -50,17 +63,32 @@ class QuantizedConvParams:
     padding: int
     cin: int
     cout: int
+    # fused implicit-GEMM layout: per-tap Cin padded to cin_pad, tap-major
+    # K = fh*fw*cin_pad, packed chunk-planar along K.
+    w_packed_fused: jnp.ndarray = None
+    cin_pad: int = 0
 
 
 def quantize_conv(w, spec_w: QuantSpec, bn_scale, bn_bias,
                   spec_x: QuantSpec, spec_y: QuantSpec,
                   stride: int = 1, padding: int = 1) -> QuantizedConvParams:
-    """w: (fh, fw, cin, cout) real weights -> packed integer artifact."""
+    """w: (fh, fw, cin, cout) real weights -> packed integer artifact.
+
+    Builds both weight layouts from one quantization pass so the fused and
+    fallback routes consume bit-identical integer weights.
+    """
     fh, fw, cin, cout = w.shape
     w_hat = quantize(w.reshape(fh * fw * cin, cout), spec_w)
     k_logical = w_hat.shape[0]
-    w_hat = packing.pad_to_chunk(w_hat, axis=0)
-    w_packed = packing.pack(w_hat, spec_w.bits, axis=0)
+    # im2col layout: one tail pad on the flat K axis
+    w_flat = packing.pad_to_chunk(w_hat, axis=0)
+    w_packed = packing.pack(w_flat, spec_w.bits, axis=0)
+    # fused layout: pad each tap's channel run independently
+    cin_pad = packing.padded_size(cin)
+    w_tap = w_hat.reshape(fh * fw, cin, cout)
+    w_tap = jnp.pad(w_tap, ((0, 0), (0, cin_pad - cin), (0, 0)))
+    w_packed_fused = packing.pack(
+        w_tap.reshape(fh * fw * cin_pad, cout), spec_w.bits, axis=0)
     kappa, lam, m, d = fold_bn_requant(
         spec_w.eps, spec_x.eps, spec_y.eps, bn_scale, bn_bias, spec_y.bits)
     gemm = QuantizedLinearParams(
@@ -68,15 +96,31 @@ def quantize_conv(w, spec_w: QuantSpec, bn_scale, bn_bias,
         a_signed=spec_x.signed, kappa=kappa, lam=lam, m=m, d=d,
         out_bits=spec_y.bits, k_logical=k_logical)
     return QuantizedConvParams(gemm=gemm, fh=fh, fw=fw, stride=stride,
-                               padding=padding, cin=cin, cout=cout)
+                               padding=padding, cin=cin, cout=cout,
+                               w_packed_fused=w_packed_fused,
+                               cin_pad=cin_pad)
 
 
 def qconv2d_apply(params: QuantizedConvParams, x_hat, *,
                   use_kernel: bool = True, interpret: bool = True,
                   block: Optional[tuple] = None):
-    """x_hat: (N, H, W, Cin) int8 integer images -> (N, Ho, Wo, Cout) int8."""
+    """x_hat: (N, H, W, Cin) int8 integer images -> (N, Ho, Wo, Cout) int8.
+
+    use_kernel=True: fused implicit-GEMM Pallas kernel (block = (bho, bn)
+    conv tile override). use_kernel=False: XLA im2col + pure-jnp packed
+    GEMM fallback.
+    """
+    if use_kernel:
+        from repro.kernels.qconv.kernel import qconv2d_fused
+        g = params.gemm
+        return qconv2d_fused(
+            x_hat, params.w_packed_fused, g.kappa, g.lam, g.m,
+            fh=params.fh, fw=params.fw, stride=params.stride,
+            padding=params.padding, cin_pad=params.cin_pad,
+            cout=params.cout, a_bits=g.a_bits, a_signed=g.a_signed,
+            w_bits=g.w_bits, d=g.d, out_bits=g.out_bits,
+            block=block, interpret=interpret)
     cols, ho, wo = im2col_hwc(x_hat, params.fh, params.fw, params.stride,
                               params.padding)
-    y = qlinear_apply(params.gemm, cols, use_kernel=use_kernel,
-                      interpret=interpret, block=block)
+    y = qlinear_apply(params.gemm, cols, use_kernel=False)
     return y.reshape(x_hat.shape[0], ho, wo, params.cout)

@@ -1,6 +1,7 @@
 """Packed sub-byte integer GEMM — the XpulpNN `sdotp`/`mac&load` analogue.
 
-One Pallas TPU kernel implements the whole paper pipeline per output tile:
+One Pallas TPU kernel implements the whole paper pipeline per output tile
+(see repro.kernels.common for the shared unpack/dot/epilogue machinery):
 
     unpack(W, X) -> int8        (the nibble/crumb SIMD operands, Table II)
     int8 x int8 -> int32 MXU    (pv.sdotp: sum-of-dot-product, eq. 2)
@@ -19,11 +20,6 @@ uses only static contiguous slices (no lane shuffles).
 
 Grid is (M/bm, N/bn, K/bk) with K innermost ("arbitrary" semantics); the
 int32 accumulator lives in a VMEM scratch buffer across K steps.
-
-Field extraction is elementwise (shift+mask on int8 containers), so a plane
-of a packed block keeps the block's shape; planes of X pair one-to-one with
-planes of W because both sides use the same chunk-planar logical K order and
-integer accumulation is order-invariant.
 """
 from __future__ import annotations
 
@@ -36,58 +32,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packing
-from repro.core.quantize import requantize_shift
+from repro.kernels.common import (EPILOGUE_DTYPES, apply_epilogue,
+                                  compiler_params, default_block,
+                                  matmul_planes)
 
-# int8 MXU-friendly minimum tile: (32, 128); accumulate in int32.
-LANE = 128
-SUBLANE_I8 = 32
-
-
-def _subsplit(planes, factor, axis):
-    """Split coarse chunk-planes into `factor`-finer planes along `axis`.
-
-    A plane of a pf-packed operand covers, per chunk, a contiguous logical
-    run of R = CHUNK // pf elements; the finer layout needs runs of
-    R // factor. Chunk order is shared, so this is a pure static reshape.
-    Fine plane q = p_coarse * factor + f.
-    """
-    if factor == 1:
-        return planes
-    pf_coarse = len(planes)
-    run = packing.CHUNK // pf_coarse
-    fine_run = run // factor
-    out = []
-    for p in planes:
-        if axis == 0:
-            k, n = p.shape
-            q = p.reshape(k // run, factor, fine_run, n)
-            out.extend(q[:, f].reshape(k // factor, n) for f in range(factor))
-        else:
-            m, k = p.shape
-            q = p.reshape(m, k // run, factor, fine_run)
-            out.extend(q[:, :, f].reshape(m, k // factor)
-                       for f in range(factor))
-    return out
-
-
-def _matmul_planes(x_block, w_block, a_bits, a_signed, w_bits):
-    """Planar sub-byte dot product -> (bm, bn) int32 partial sum."""
-    pf_a = packing.pack_factor(a_bits)
-    pf_w = packing.pack_factor(w_bits)
-    x_planes = packing.unpack_planes(x_block, a_bits, a_signed)
-    w_planes = packing.unpack_planes(w_block, w_bits, True)  # weights signed
-
-    pf = max(pf_a, pf_w)
-    x_planes = _subsplit(x_planes, pf // pf_a, axis=1)
-    w_planes = _subsplit(w_planes, pf // pf_w, axis=0)
-
-    acc = None
-    for xp, wp in zip(x_planes, w_planes):
-        part = jax.lax.dot_general(
-            xp, wp, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        acc = part if acc is None else acc + part
-    return acc
+# Back-compat re-exports: these lived here before the kernels/common split.
+from repro.kernels.common import (LANE, SUBLANE_I8,  # noqa: F401
+                                  matmul_planes as _matmul_planes,
+                                  subsplit as _subsplit)
 
 
 def _qmatmul_kernel(x_ref, w_ref, kappa_ref, lam_ref, m_ref, o_ref, acc_ref,
@@ -99,52 +51,15 @@ def _qmatmul_kernel(x_ref, w_ref, kappa_ref, lam_ref, m_ref, o_ref, acc_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _matmul_planes(
+    acc_ref[...] += matmul_planes(
         x_ref[...], w_ref[...], a_bits, a_signed, w_bits)
 
     @pl.when(k_idx == nk - 1)
     def _epilogue():
-        acc = acc_ref[...]
-        if epilogue == "int":
-            # eq.(3): integer BN (per out-channel), then eq.(4) requant+clip
-            phi_p = acc * kappa_ref[...] + lam_ref[...]
-            y = requantize_shift(phi_p, m_ref[...], d)
-            hi = packing.int_range(out_bits, False)[1]
-            o_ref[...] = jnp.clip(y, 0, hi).astype(jnp.int8)
-        elif epilogue == "dequant":
-            o_ref[...] = (acc.astype(jnp.float32) * scale).astype(o_ref.dtype)
-        else:  # 'raw' int32 accumulators
-            o_ref[...] = acc
-
-
-def default_block(m, n, k, a_bits, w_bits,
-                  vmem_budget: int = 8 * 1024 * 1024):
-    """Pick (bm, bn, bk): MXU-aligned, chunk-aligned, VMEM-bounded.
-
-    The paper's 4x2 -> 4x4 register-tiling exploration becomes this block
-    shape selection; benchmarks/fig8 measures the ladder.
-    """
-    def align(v, unit):
-        return max(unit, (v // unit) * unit)
-
-    bm = align(min(m, 256), SUBLANE_I8)
-    bn = align(min(n, 512), LANE)
-    bk = align(min(k, 1024), packing.CHUNK)
-    pf_a, pf_w = packing.pack_factor(a_bits), packing.pack_factor(w_bits)
-
-    def fits(bm, bn, bk):
-        x_b = bm * (bk // pf_a)
-        w_b = (bk // pf_w) * bn
-        io = bm * bn * 4 * 2  # acc scratch + out block
-        return 2 * (x_b + w_b) + io <= vmem_budget
-
-    while not fits(bm, bn, bk) and bk > packing.CHUNK:
-        bk //= 2
-    while not fits(bm, bn, bk) and bn > LANE:
-        bn //= 2
-    while not fits(bm, bn, bk) and bm > SUBLANE_I8:
-        bm //= 2
-    return bm, bn, bk
+        o_ref[...] = apply_epilogue(
+            acc_ref[...], kappa_ref[...], lam_ref[...], m_ref[...],
+            d=d, out_bits=out_bits, epilogue=epilogue, scale=scale,
+            out_dtype=o_ref.dtype)
 
 
 def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
@@ -175,8 +90,7 @@ def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
     nk = k // bk
 
     if out_dtype is None:
-        out_dtype = {"int": jnp.int8, "dequant": jnp.bfloat16,
-                     "raw": jnp.int32}[epilogue]
+        out_dtype = EPILOGUE_DTYPES[epilogue]
 
     kernel = functools.partial(
         _qmatmul_kernel, nk=nk, a_bits=a_bits, a_signed=a_signed,
@@ -196,7 +110,7 @@ def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mdim, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed, kappa.reshape(1, -1), lam.reshape(1, -1),

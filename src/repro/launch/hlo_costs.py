@@ -137,20 +137,37 @@ def parse_module(text: str) -> Dict[str, Computation]:
 
 
 def _operand_names(rest: str) -> List[str]:
-    """Names of operands in 'a, %b, c), attrs...' (up to closing paren)."""
-    depth = 1
-    out = []
+    """Names of operands in 'a, %b, c), attrs...' (up to closing paren).
+
+    Handles both operand spellings XLA emits: bare names ('%a, %b') and
+    shape-prefixed ('f32[64,128]{1,0} %a, ...') — commas inside []/{} are
+    not separators, and a shape prefix before the name is dropped."""
+    depth_paren, depth_brack = 1, 0
+    parts: List[str] = []
     token = ""
     for ch in rest:
         if ch == "(":
-            depth += 1
+            depth_paren += 1
         elif ch == ")":
-            depth -= 1
-            if depth == 0:
+            depth_paren -= 1
+            if depth_paren == 0:
                 break
-        if depth >= 1:
+        if ch in "[{":
+            depth_brack += 1
+        elif ch in "]}":
+            depth_brack -= 1
+        if ch == "," and depth_paren == 1 and depth_brack == 0:
+            parts.append(token)
+            token = ""
+        else:
             token += ch
-    return [t.strip().lstrip("%") for t in token.split(",") if t.strip()]
+    parts.append(token)
+    names = []
+    for t in parts:
+        t = t.strip()
+        if t:
+            names.append(t.split()[-1].lstrip("%"))
+    return names
 
 
 def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:

@@ -23,6 +23,7 @@ from repro.nn.layers import QuantConfig
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.train.optimizer import OptConfig
 from repro.train.step import TrainStepConfig, make_train_fns
+from repro.parallel.ctx import use_mesh
 
 
 def main():
@@ -69,7 +70,7 @@ def main():
         else 0,
         src_len=args.seq if cfg.family == "encdec" else cfg.src_len)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jstep = jax.jit(step, in_shardings=(shards["state"],
                                             shards["batch"]),
                         out_shardings=(shards["state"], None),

@@ -116,6 +116,8 @@ def _needs_src(cfg: ModelConfig) -> bool:
 
 
 _REGISTRY: dict = {}
+_LOADED = False  # `not _REGISTRY` is the wrong guard: importing any single
+# config module registers it and would mask the rest forever
 
 
 def register(cfg: ModelConfig):
@@ -124,18 +126,19 @@ def register(cfg: ModelConfig):
 
 
 def get_config(name: str) -> ModelConfig:
-    if not _REGISTRY:
+    if not _LOADED:
         _load_all()
     return _REGISTRY[name]
 
 
 def list_archs():
-    if not _REGISTRY:
+    if not _LOADED:
         _load_all()
     return sorted(_REGISTRY)
 
 
 def _load_all():
+    global _LOADED
     import importlib
     import pkgutil
 
@@ -143,6 +146,7 @@ def _load_all():
     for mod in pkgutil.iter_modules(cpkg.__path__):
         if mod.name not in ("base",):
             importlib.import_module(f"repro.configs.{mod.name}")
+    _LOADED = True
 
 
 def get_smoke_config(name: str) -> ModelConfig:

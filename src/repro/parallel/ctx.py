@@ -23,6 +23,19 @@ from repro.parallel.sharding import DEFAULT_RULES, shard_spec_for
 _ACTIVE = contextvars.ContextVar("repro_mesh_ctx", default=None)
 
 
+def use_mesh(mesh):
+    """Ambient-mesh context manager across jax versions.
+
+    Newer jax spells it `jax.set_mesh(mesh)`; on jax<=0.4 the Mesh object
+    itself is the context manager with the same ambient-mesh effect for
+    jit/shard_map spec resolution. Every repro call site (and the tests)
+    goes through this helper instead of `jax.set_mesh` directly.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 @contextlib.contextmanager
 def activation_sharding(mesh, rules=DEFAULT_RULES):
     tok = _ACTIVE.set((mesh, rules))

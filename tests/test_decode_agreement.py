@@ -10,9 +10,14 @@ import pytest
 
 from repro.models.api import build
 
-ARCHS = ["olmo_1b", "phi3_mini_3p8b", "qwen2p5_3b", "gemma3_1b",
-         "mamba2_370m", "recurrentgemma_9b", "seamless_m4t_large_v2",
-         "llama3p2_vision_90b", "kimi_k2_1t", "llama4_maverick_400b"]
+_ALL = ["olmo_1b", "phi3_mini_3p8b", "qwen2p5_3b", "gemma3_1b",
+        "mamba2_370m", "recurrentgemma_9b", "seamless_m4t_large_v2",
+        "llama3p2_vision_90b", "kimi_k2_1t", "llama4_maverick_400b"]
+# one representative per family stays in the fast tier (attention LM, SSM);
+# the remaining eight are several-second decode loops each: --runslow
+_FAST = {"olmo_1b"}
+ARCHS = [a if a in _FAST else pytest.param(a, marks=pytest.mark.slow)
+         for a in _ALL]
 
 
 def _fill_cross_kv(cfg, model, params, batch, cache):
@@ -63,6 +68,7 @@ def test_decode_matches_forward(modname):
     assert max(errs) < 2e-2, errs
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_close():
     """int8 KV cache decode stays close to the bf16-cache decode."""
     m = importlib.import_module("repro.configs.qwen2p5_3b")

@@ -1,10 +1,20 @@
-"""Property tests for the kernel's BlockSpec selection: the chosen tile
+"""Property tests for the kernels' BlockSpec selection: the chosen tile
 always fits the VMEM budget and is MXU/chunk aligned (the paper's 4x4-
-layout feasibility question at the VMEM level)."""
-from hypothesis import given, settings, strategies as st
+layout feasibility question at the VMEM level). Covers both the GEMM
+selector (`default_block`) and the fused-conv selector
+(`conv_default_block`), whose grid must also cover ragged Ho edges."""
+import pytest
+
+from conftest import hypothesis_api
+
+# guarded: property tests skip (not hard-fail) without hypothesis
+given, settings, st = hypothesis_api()
 
 from repro.core import packing
+from repro.kernels.common import LANE, conv_default_block, conv_working_set
 from repro.kernels.qmatmul import default_block
+
+BUDGET = 8 * 1024 * 1024
 
 
 @given(m=st.integers(32, 8192), n=st.integers(128, 16384),
@@ -12,10 +22,71 @@ from repro.kernels.qmatmul import default_block
        a_bits=st.sampled_from([8, 4, 2]), w_bits=st.sampled_from([8, 4, 2]))
 @settings(max_examples=100, deadline=None)
 def test_default_block_fits_vmem(m, n, k, a_bits, w_bits):
-    budget = 8 * 1024 * 1024
-    bm, bn, bk = default_block(m, n, k, a_bits, w_bits, budget)
+    bm, bn, bk = default_block(m, n, k, a_bits, w_bits, BUDGET)
     pf_a, pf_w = 8 // a_bits, 8 // w_bits
     work = 2 * (bm * (bk // pf_a) + (bk // pf_w) * bn) + 2 * bm * bn * 4
-    assert work <= budget
+    assert work <= BUDGET
     assert bk % packing.CHUNK == 0
     assert bm >= 32 and bn >= 128
+
+
+def _check_conv_block(ho, wo, cout, fh, fw, cin_pad, stride, a_bits, w_bits):
+    bho, bn = conv_default_block(1, ho, wo, cout, fh, fw, cin_pad, stride,
+                                 a_bits, w_bits, BUDGET)
+    # MXU/chunk alignment: lane dim a LANE multiple, per-tap contraction
+    # run (and hence every im2col scratch column run) CHUNK-aligned
+    assert bn % LANE == 0 and bn >= LANE
+    assert cin_pad % packing.CHUNK == 0
+    # ragged Ho coverage: ceil(ho/bho) tiles cover every output row with
+    # less than one tile of overshoot
+    assert 1 <= bho <= ho
+    n_tiles = -(-ho // bho)
+    assert n_tiles * bho >= ho
+    assert n_tiles * bho - ho < bho
+    # the working set the wrapper will actually allocate fits the budget
+    assert conv_working_set(
+        bho, bn, ho=ho, wo=wo, cout=cout, fh=fh, fw=fw, cin_pad=cin_pad,
+        stride=stride, a_bits=a_bits, w_bits=w_bits) <= BUDGET
+    return bho, bn
+
+
+@given(ho=st.integers(1, 64), wo=st.integers(1, 64),
+       cout=st.integers(1, 1024),
+       fh=st.sampled_from([1, 3, 5, 7]), fw=st.sampled_from([1, 3, 5, 7]),
+       n_chunks=st.integers(1, 3), stride=st.sampled_from([1, 2]),
+       a_bits=st.sampled_from([8, 4, 2]), w_bits=st.sampled_from([8, 4, 2]))
+@settings(max_examples=100, deadline=None)
+def test_conv_default_block_fits_vmem(ho, wo, cout, fh, fw, n_chunks,
+                                      stride, a_bits, w_bits):
+    _check_conv_block(ho, wo, cout, fh, fw, n_chunks * packing.CHUNK,
+                      stride, a_bits, w_bits)
+
+
+# deterministic edge cases — these run even without hypothesis installed
+@pytest.mark.parametrize("ho,wo", [(1, 1), (7, 5), (33, 1), (1, 63),
+                                   (16, 16), (64, 64)])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv_block_ragged_edges(ho, wo, stride):
+    bho, bn = _check_conv_block(ho, wo, cout=40, fh=3, fw=3,
+                                cin_pad=packing.CHUNK, stride=stride,
+                                a_bits=4, w_bits=4)
+    assert -(-ho // bho) * bho >= ho
+
+
+def test_conv_block_paper_layers():
+    """The paper's fig.11 layers (16x16x32, 32x32x32 -> 64ch 3x3) pick a
+    single-tile block: the whole output in one VMEM-resident pass."""
+    for hw in (16, 32):
+        bho, bn = _check_conv_block(hw, hw, cout=64, fh=3, fw=3,
+                                    cin_pad=packing.CHUNK, stride=1,
+                                    a_bits=4, w_bits=4)
+        assert bn == LANE
+
+
+def test_conv_block_rejects_oversized_image():
+    """Images whose packed whole-image block cannot fit VMEM must raise
+    (callers then use the im2col fallback) rather than return a tile that
+    would OOM the kernel."""
+    with pytest.raises(ValueError):
+        conv_default_block(1, 4096, 4096, 64, 3, 3, 8 * packing.CHUNK,
+                           1, 8, 8, BUDGET)

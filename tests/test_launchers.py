@@ -1,7 +1,11 @@
-"""CLI launchers run end-to-end (subprocess smoke)."""
+"""CLI launchers run end-to-end (subprocess smoke) — slow, --runslow."""
 import pathlib
 import subprocess
 import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 

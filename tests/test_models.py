@@ -13,9 +13,18 @@ from repro.models.api import build, list_archs
 
 MODS = sorted(m.name for m in pkgutil.iter_modules(cpkg.__path__)
               if m.name != "base")
+# big/exotic archs are several seconds each even at smoke size; keep a
+# representative fast set per family, run the rest with --runslow
+_HEAVY = {"recurrentgemma_9b", "llama3p2_vision_90b", "llama4_maverick_400b",
+          "kimi_k2_1t", "seamless_m4t_large_v2", "gemma3_1b", "qwen2p5_3b"}
 
 
-@pytest.mark.parametrize("modname", MODS)
+def _arch_params(names):
+    return [pytest.param(n, marks=pytest.mark.slow) if n in _HEAVY else n
+            for n in names]
+
+
+@pytest.mark.parametrize("modname", _arch_params(MODS))
 def test_smoke_forward(modname):
     m = importlib.import_module(f"repro.configs.{modname}")
     cfg = m.smoke_config()
@@ -38,8 +47,9 @@ def test_smoke_forward(modname):
     assert np.isfinite(float(loss))
 
 
-@pytest.mark.parametrize("modname", ["qwen2p5_3b", "mamba2_370m",
-                                     "recurrentgemma_9b"])
+@pytest.mark.parametrize(
+    "modname",
+    _arch_params(["qwen2p5_3b", "mamba2_370m", "recurrentgemma_9b"]))
 def test_grad_finite(modname):
     m = importlib.import_module(f"repro.configs.{modname}")
     cfg = m.smoke_config()

@@ -2,7 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_api
+
+# guarded: property tests skip (not hard-fail) without hypothesis
+given, settings, st = hypothesis_api()
 
 from repro.core import packing
 

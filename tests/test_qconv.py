@@ -10,10 +10,17 @@ from repro.core import packing
 from repro.kernels.qconv import quantize_conv, qconv2d_apply, qconv2d_ref
 
 
-@pytest.mark.parametrize("bits", [8, 4, 2])
-@pytest.mark.parametrize("hw", [(16, 16), (8, 12)])
+# the 16x16 paper shape stays in the fast tier at the headline 4-bit
+# width; its 8/2-bit variants (same code paths, bigger interpret grids) run
+# with --runslow. The (8,12) non-square case runs at every width.
+@pytest.mark.parametrize("bits,hw", [
+    pytest.param(8, (16, 16), marks=pytest.mark.slow),
+    (4, (16, 16)),
+    pytest.param(2, (16, 16), marks=pytest.mark.slow),
+    (8, (8, 12)), (4, (8, 12)), (2, (8, 12)),
+])
 def test_conv_vs_direct_oracle(bits, hw, rng):
-    N, (H, W), Cin, Cout, F = 2, hw, 32, 64, 3
+    N, (H, W), Cin, Cout, F = 1, hw, 32, 64, 3
     w = rng.normal(size=(F, F, Cin, Cout)).astype(np.float32) * 0.08
     x = np.maximum(rng.normal(size=(N, H, W, Cin)), 0).astype(np.float32)
     bn_s = rng.normal(size=(Cout,)).astype(np.float32) * 0.05 + 0.3

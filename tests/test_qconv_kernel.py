@@ -1,0 +1,169 @@
+"""Fused implicit-GEMM conv kernel vs the direct-convolution numpy oracle.
+
+Bit-exactness of `qconv2d_fused` against `qconv/ref.py` across the full
+{a_bits, w_bits} x stride x padding grid, on shapes chosen to stress the
+gather: non-square H != W, Cin that is NOT a CHUNK multiple (per-tap
+channel padding path), ragged Ho tile edges, and degenerate 1x1 /
+non-square filters. The oracle convolves directly (no im2col), so a bug
+in the in-kernel gather or the per-tap packed weight layout cannot hide
+in a shared code path.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (QuantSpec, quantize, calibrate_weight,
+                        calibrate_activation)
+from repro.core import packing
+from repro.kernels.qconv import (quantize_conv, qconv2d_apply, qconv2d_ref,
+                                 qconv2d_fused)
+
+
+def _quantized_layer(rng, shape_hw, cin, cout, f, a_bits, w_bits, out_bits,
+                     stride, padding, n=1, fw=None):
+    fh, fw = f, f if fw is None else fw
+    h, w_ = shape_hw
+    w = rng.normal(size=(fh, fw, cin, cout)).astype(np.float32) * 0.08
+    x = np.maximum(rng.normal(size=(n, h, w_, cin)), 0).astype(np.float32)
+    bn_s = rng.normal(size=(cout,)).astype(np.float32) * 0.05 + 0.3
+    bn_b = rng.normal(size=(cout,)).astype(np.float32) * 0.01
+    sw = calibrate_weight(jnp.asarray(w), w_bits)
+    sx = calibrate_activation(x, a_bits, 100.0)
+    sy = QuantSpec.activation(out_bits, 8.0)
+    qp = quantize_conv(jnp.asarray(w), sw, bn_s, bn_b, sx, sy,
+                       stride, padding)
+    xq = quantize(jnp.asarray(x), sx)
+    return qp, xq
+
+
+def _oracle(qp, xq, out_bits):
+    fh, fw, cin, cout = qp.fh, qp.fw, qp.cin, qp.cout
+    w_unp = np.asarray(packing.unpack(
+        qp.gemm.w_packed, qp.gemm.w_bits, True, axis=0))[: fh * fw * cin]
+    return qconv2d_ref(np.asarray(xq), w_unp.reshape(fh, fw, cin, cout),
+                       np.asarray(qp.gemm.kappa), np.asarray(qp.gemm.lam),
+                       np.asarray(qp.gemm.m), qp.gemm.d, out_bits,
+                       qp.stride, qp.padding)
+
+
+# Cin=24 is deliberately NOT a CHUNK multiple -> per-tap padding path;
+# H != W exercises the non-square gather. The layer is quantized once per
+# bit pair (stride/padding do not touch the packed artifact) and every
+# stride x padding combo of the grid runs against the oracle.
+@pytest.mark.parametrize("a_bits", [8, 4, 2])
+@pytest.mark.parametrize("w_bits", [8, 4, 2])
+def test_fused_bit_exact_grid(a_bits, w_bits, rng):
+    import dataclasses
+    qp0, xq = _quantized_layer(rng, (7, 5), cin=24, cout=40, f=3,
+                               a_bits=a_bits, w_bits=w_bits, out_bits=a_bits,
+                               stride=1, padding=0)
+    for stride, padding in [(1, 0), (1, 1), (2, 0), (2, 1)]:
+        qp = dataclasses.replace(qp0, stride=stride, padding=padding)
+        want = _oracle(qp, xq, a_bits)
+        got = qconv2d_apply(qp, xq, use_kernel=True)
+        assert got.dtype == jnp.int8
+        assert np.array_equal(np.asarray(got), want), (
+            f"fused conv mismatch a={a_bits} w={w_bits} "
+            f"s={stride} p={padding}")
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_fused_matches_im2col_fallback(bits, rng):
+    """The two routes of qconv2d_apply are bit-identical."""
+    qp, xq = _quantized_layer(rng, (9, 6), cin=24, cout=33, f=3,
+                              a_bits=bits, w_bits=bits, out_bits=bits,
+                              stride=1, padding=1, n=2)
+    got_fused = qconv2d_apply(qp, xq, use_kernel=True)
+    got_jnp = qconv2d_apply(qp, xq, use_kernel=False)
+    assert np.array_equal(np.asarray(got_fused), np.asarray(got_jnp))
+
+
+def test_fused_ragged_ho_tiles(rng):
+    """Explicit block whose bho does not divide Ho: the padded rows must
+    be gathered in-bounds (zero rows) and sliced off the output."""
+    qp, xq = _quantized_layer(rng, (12, 6), cin=24, cout=40, f=3,
+                              a_bits=4, w_bits=4, out_bits=4,
+                              stride=1, padding=1)
+    want = _oracle(qp, xq, 4)
+    got = qconv2d_apply(qp, xq, use_kernel=True, block=(5, 128))  # ho=12
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_fused_cin_chunk_multiple(rng):
+    """Cin == CHUNK: no channel padding, pack factor path only."""
+    qp, xq = _quantized_layer(rng, (6, 8), cin=packing.CHUNK, cout=40, f=3,
+                              a_bits=4, w_bits=4, out_bits=4,
+                              stride=1, padding=1, n=1)
+    assert qp.cin_pad == packing.CHUNK
+    want = _oracle(qp, xq, 4)
+    got = qconv2d_apply(qp, xq, use_kernel=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_fused_multiple_cout_panels(rng):
+    """cout spanning several bn panels: the im2col scratch is gathered on
+    the first panel only and reused for the rest (j>0 grid steps)."""
+    qp, xq = _quantized_layer(rng, (6, 5), cin=24, cout=200, f=3,
+                              a_bits=4, w_bits=4, out_bits=4,
+                              stride=1, padding=1, n=2)
+    want = _oracle(qp, xq, 4)
+    got = qconv2d_apply(qp, xq, use_kernel=True, block=(3, 128))
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_fused_1x1_conv(rng):
+    """1x1 filter: the implicit GEMM degenerates to a plain packed GEMM
+    over pixels."""
+    qp, xq = _quantized_layer(rng, (5, 7), cin=24, cout=40, f=1,
+                              a_bits=4, w_bits=2, out_bits=4,
+                              stride=1, padding=0, n=1)
+    want = _oracle(qp, xq, 4)
+    got = qconv2d_apply(qp, xq, use_kernel=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_fused_non_square_filter(rng):
+    qp, xq = _quantized_layer(rng, (8, 6), cin=24, cout=40, f=3, fw=1,
+                              a_bits=4, w_bits=4, out_bits=4,
+                              stride=1, padding=0, n=1)
+    want = _oracle(qp, xq, 4)
+    got = qconv2d_apply(qp, xq, use_kernel=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_fused_stride2_even_dims(rng):
+    """stride 2 on even dims + padding: the gather's strided slices must
+    stay aligned with the oracle's indexing."""
+    qp, xq = _quantized_layer(rng, (8, 10), cin=24, cout=40, f=3,
+                              a_bits=2, w_bits=4, out_bits=4,
+                              stride=2, padding=1, n=1)
+    want = _oracle(qp, xq, 4)
+    got = qconv2d_apply(qp, xq, use_kernel=True)
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_fused_raw_epilogue_matches_int32_accum(rng):
+    """epilogue='raw' exposes the int32 accumulators: compare against a
+    direct numpy int32 convolution (no BN/requant)."""
+    qp, xq = _quantized_layer(rng, (6, 5), cin=24, cout=40, f=3,
+                              a_bits=4, w_bits=4, out_bits=4,
+                              stride=1, padding=1, n=1)
+    g = qp.gemm
+    got = qconv2d_fused(
+        xq, qp.w_packed_fused, g.kappa, g.lam, g.m,
+        fh=qp.fh, fw=qp.fw, stride=qp.stride, padding=qp.padding,
+        cin_pad=qp.cin_pad, cout=qp.cout, a_bits=g.a_bits,
+        a_signed=g.a_signed, w_bits=g.w_bits, d=g.d, out_bits=g.out_bits,
+        epilogue="raw")
+    w_unp = np.asarray(packing.unpack(
+        g.w_packed, g.w_bits, True, axis=0))[: qp.fh * qp.fw * qp.cin]
+    w_unp = w_unp.reshape(qp.fh, qp.fw, qp.cin, qp.cout).astype(np.int32)
+    x = np.pad(np.asarray(xq, np.int32),
+               ((0, 0), (1, 1), (1, 1), (0, 0)))
+    acc = np.zeros(got.shape, np.int64)
+    for dy in range(3):
+        for dx in range(3):
+            patch = x[:, dy:dy + 6, dx:dx + 5]
+            acc += np.einsum("nhwc,co->nhwo", patch, w_unp[dy, dx],
+                             dtype=np.int64)
+    assert np.array_equal(np.asarray(got), acc.astype(np.int32))

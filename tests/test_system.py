@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import SyntheticLM
@@ -47,6 +48,7 @@ def test_paper_pipeline_two_layer_integer_chain(rng=None):
             ref = np.asarray(y2)
 
 
+@pytest.mark.slow
 def test_e2e_lm_train_loss_decreases():
     from repro.configs.gemma3_1b import smoke_config
     cfg = smoke_config()
@@ -65,6 +67,7 @@ def test_e2e_lm_train_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5])
 
 
+@pytest.mark.slow
 def test_qat_fake_quant_trains():
     """QAT: fake-quant mode trains (STE gradients flow)."""
     from repro.configs.olmo_1b import smoke_config

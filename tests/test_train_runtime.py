@@ -33,7 +33,9 @@ def _setup(state_bits=32, compress=32):
                         grad_compress_bits=compress))
 
 
-@pytest.mark.parametrize("state_bits,compress", [(32, 32), (8, 8)])
+@pytest.mark.parametrize(
+    "state_bits,compress",
+    [(32, 32), pytest.param(8, 8, marks=pytest.mark.slow)])
 def test_loss_decreases(state_bits, compress):
     cfg, model, (init_fn, step, _) = _setup(state_bits, compress)
     batch = {"tokens": jnp.ones((2, 16), jnp.int32),
@@ -80,6 +82,7 @@ def test_checkpoint_roundtrip_and_atomicity():
         shutil.rmtree(tmp)
 
 
+@pytest.mark.slow  # full Trainer run + resume; ckpt roundtrip stays fast
 def test_trainer_restart_resume():
     cfg, model, (init_fn, step, _) = _setup()
     jstep = jax.jit(step)
