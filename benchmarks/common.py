@@ -13,6 +13,10 @@ import numpy as np
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 
+# every emit() also lands here so benchmarks/run.py can dump the whole
+# session as machine-readable JSON (perf-trajectory tracking in CI)
+ROWS = []
+
 
 def time_call(fn, *args, warmup=1, iters=3):
     for _ in range(warmup):
@@ -25,4 +29,6 @@ def time_call(fn, *args, warmup=1, iters=3):
 
 
 def emit(name, us, derived=""):
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")

@@ -1,18 +1,40 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
-from benchmarks import (fig8_macs_per_issue, fig9_cluster_scaling,
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the same data as
+machine-readable JSON (``--json``, default ``BENCH_kernels.json``:
+name -> us_per_call, plus the derived annotations under "derived") so CI
+can archive the perf trajectory run over run.
+"""
+import argparse
+import json
+
+from benchmarks import (common, fig8_macs_per_issue, fig9_cluster_scaling,
                         fig11_conv_layers, fig13_sota_comparison,
                         table1_envelope)
 
 
-def main() -> None:
+def main(json_path: str = "BENCH_kernels.json") -> None:
     print("name,us_per_call,derived")
     fig8_macs_per_issue.main()
     fig9_cluster_scaling.main()
     fig11_conv_layers.main()
     fig13_sota_comparison.main()
     table1_envelope.main()
+    if json_path:
+        payload = {
+            "us_per_call": {r["name"]: r["us_per_call"]
+                            for r in common.ROWS},
+            "derived": {r["name"]: r["derived"] for r in common.ROWS
+                        if r["derived"]},
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(common.ROWS)} rows -> {json_path}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="output path for the JSON rows ('' disables)")
+    args = ap.parse_args()
+    main(args.json)

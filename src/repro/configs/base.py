@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.deploy.policy import PrecisionPlan
 from repro.nn.layers import QOFF, QuantConfig
 
 
@@ -63,8 +64,12 @@ class ModelConfig:
     # griffin (recurrentgemma): pattern handled via rnn_pattern
     lru_width: int = 0
     rnn_pattern: Tuple[str, ...] = ()  # e.g. ("rec","rec","attn")
-    # quantization (the paper's technique)
+    # quantization (the paper's technique). `quant` is the uniform/default
+    # QuantConfig; `quant_plan` (mixed-precision deployment) overrides
+    # {w_bits, a_bits, use_kernel, a_absmax} per dense param path — see
+    # repro/deploy/policy.py. Packed param shapes follow the resolved bits.
     quant: QuantConfig = QOFF
+    quant_plan: Optional[PrecisionPlan] = None
     kv_quant_bits: int = 16
     # training
     param_dtype: str = "float32"

@@ -58,13 +58,42 @@ def _check_last_axis(x, bits):
         )
 
 
-def pack(x, bits: int, axis: int = -1):
+def check_range(x, bits: int, signed: bool = True):
+    """Assert every value of ``x`` fits the ``bits``-wide integer grid.
+
+    ``pack`` keeps only the low ``bits`` bits, so an out-of-range value is
+    silently truncated into a *different* in-range value — a corrupt
+    artifact with no error. Host-side packing paths call this first; it
+    forces concrete values (``np.asarray``) and therefore must not be used
+    under jit/vmap tracing.
+    """
+    lo, hi = int_range(bits, signed)
+    xv = np.asarray(x)
+    if xv.size == 0:
+        return
+    saw_lo, saw_hi = int(xv.min()), int(xv.max())
+    if saw_lo < lo or saw_hi > hi:
+        raise ValueError(
+            f"pack: values outside the {'signed' if signed else 'unsigned'} "
+            f"{bits}-bit range [{lo}, {hi}] (saw min={saw_lo}, "
+            f"max={saw_hi}); packing would silently truncate — "
+            "quantize/clip first")
+
+
+def pack(x, bits: int, axis: int = -1, *, assert_range: bool = False,
+         signed: bool = True):
     """Pack sub-byte integer values (stored as int8) into int8 containers.
 
     ``x`` values must already be in the signed/unsigned range of ``bits``
     (packing only keeps the low ``bits`` bits, so signed and unsigned share
     one packer).  Packing is chunk-planar along ``axis``.
+
+    ``assert_range=True`` raises instead of truncating out-of-range values
+    (``signed`` selects the grid checked). Host/eager paths only — the check
+    needs concrete values.
     """
+    if assert_range:
+        check_range(x, bits, signed)
     if bits == 8:
         return x.astype(jnp.int8)
     pf = pack_factor(bits)

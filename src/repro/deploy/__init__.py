@@ -1,0 +1,34 @@
+"""Mixed-precision deployment planner (XpulpNN's *flexible* inference).
+
+Turns an fp checkpoint into a heterogeneous W{8,4,2} packed serving
+artifact: a per-dense-layer precision policy (`policy`), a calibration
+pass recording activation ranges and bit-width sensitivity (`calibrate`),
+a byte-minimizing bit-width search under a sensitivity budget (`planner`),
+and the plan-driven checkpoint converter (`apply`).
+
+Only `policy` is imported eagerly: `configs.base` embeds `PrecisionPlan`
+in `ModelConfig`, while `calibrate` imports the model zoo (which imports
+`configs.base`) — the heavier submodules load lazily via PEP 562.
+"""
+from repro.deploy.policy import (PlanRule, PrecisionPlan, load_plan,  # noqa
+                                 resolve_qcfg, save_plan)
+
+_LAZY = {
+    "apply_plan": "repro.deploy.apply",
+    "dense_inventory": "repro.deploy.apply",
+    "quantized_dense_paths": "repro.deploy.apply",
+    "CalibStats": "repro.deploy.calibrate",
+    "calibrate": "repro.deploy.calibrate",
+    "auto_budget": "repro.deploy.planner",
+    "plan_mixed_precision": "repro.deploy.planner",
+}
+
+__all__ = ["PlanRule", "PrecisionPlan", "resolve_qcfg", "save_plan",
+           "load_plan"] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(name)

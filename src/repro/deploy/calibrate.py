@@ -1,0 +1,189 @@
+"""Calibration: per-dense activation ranges + bit-width sensitivity proxies.
+
+An *eager* layer-by-layer replay of the fp model (no jit, no scan — stacked
+layer params are indexed per depth) with the `nn/layers.py::dense_tap`
+observer installed. For every quantized dense path the tap records:
+
+  a_absmax   — running max |x| over all calibration tokens (the static
+               activation scale the int serving path uses), and
+  sens[b]    — an output-MSE sensitivity proxy per candidate w_bits b:
+               relative MSE of the simulated W{b}A8 integer GEMM against
+               the fp matmul, accumulated over depth instances and batches.
+
+The proxy simulates exactly the deployed integer path's arithmetic
+(per-output-channel symmetric weight grids, symmetric int8 activations) but
+skips packing — so it prices what serving at bits b actually costs in
+output error, per layer, on real activation statistics. The planner trades
+these against packed-byte savings.
+
+Families without an eager replay (encdec/mamba/griffin and cross-attn LMs)
+fall back to weight-only sensitivities (activation second moment assumed
+1.0, default absmax) — still a usable ordering, just less sharp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.deploy.apply import dense_inventory, quantized_dense_paths
+from repro.nn.layers import dense_tap, quantize_dense_weights
+
+CANDIDATE_BITS = (8, 4, 2)
+
+
+@dataclasses.dataclass
+class CalibStats:
+    """Accumulated calibration record for one dense path."""
+
+    path: str
+    layers: int                 # stacked depth instances
+    d_in: int
+    d_out: int
+    a_absmax: float = 0.0
+    sq_err: Dict[int, float] = dataclasses.field(default_factory=dict)
+    sq_ref: float = 0.0
+    taps: int = 0
+
+    def sens(self, bits: int) -> float:
+        """Relative output MSE at w_bits=bits (the planner's cost unit)."""
+        return self.sq_err.get(bits, 0.0) / (self.sq_ref + 1e-12)
+
+
+def _sim_int_dense(x, w, w_bits: int, a_bits: int, a_absmax: float):
+    """Simulate the deployed integer dense without packing: the weight grid
+    is the serving one (`layers.quantize_dense_weights`, shared with
+    `apply_plan`), activations are symmetric on the a_bits grid exactly as
+    `layers._int_matmul` quantizes them."""
+    w_hat, w_scale = quantize_dense_weights(w, w_bits)
+    a_max = packing.int_range(a_bits, True)[1]
+    a_scale = max(a_absmax, 1e-8) / a_max
+    x_q = jnp.clip(jnp.round(x / a_scale), -a_max, a_max)
+    return (x_q @ w_hat.astype(jnp.float32)) * (w_scale * a_scale)
+
+
+def _walk_dense_ids(tree, prefix: Tuple[str, ...] = ()):
+    """id(w-leaf) -> "/"-joined dense path, for one (unstacked) layer's
+    params. Eager apply passes these exact arrays into dense_apply."""
+    out = {}
+    if isinstance(tree, dict):
+        if "w" in tree and not isinstance(tree["w"], dict):
+            out[id(tree["w"])] = "/".join(prefix)
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out.update(_walk_dense_ids(v, prefix + (k,)))
+    return out
+
+
+class _Collector:
+    def __init__(self, stats: Dict[str, CalibStats], bits: Sequence[int],
+                 a_bits: int, max_rows: int):
+        self.stats = stats
+        self.bits = tuple(bits)
+        self.a_bits = a_bits
+        self.max_rows = max_rows
+        self.id2path: Dict[int, str] = {}
+
+    def __call__(self, p, x):
+        w = p.get("w")
+        if w is None:
+            return
+        path = self.id2path.get(id(w))
+        if path is None or path not in self.stats:
+            return
+        st = self.stats[path]
+        x2 = jnp.asarray(x, jnp.float32).reshape(-1, x.shape[-1])
+        # the static serving scale must see every token — subsample only
+        # the (quadratic-cost) MSE simulation below
+        absmax = float(jnp.max(jnp.abs(x2)))
+        st.a_absmax = max(st.a_absmax, absmax)
+        if x2.shape[0] > self.max_rows:
+            stride = -(-x2.shape[0] // self.max_rows)
+            x2 = x2[::stride]
+        wf = jnp.asarray(w, jnp.float32)
+        y_ref = x2 @ wf
+        st.sq_ref += float(jnp.sum(y_ref * y_ref))
+        for b in self.bits:
+            y_q = _sim_int_dense(x2, wf, b, self.a_bits, absmax)
+            err = y_q - y_ref
+            st.sq_err[b] = st.sq_err.get(b, 0.0) + float(jnp.sum(err * err))
+        st.taps += 1
+
+
+def _replay_lm(model, params, tokens, collector):
+    """Eager per-depth replay of models/lm.forward (no cross-attn)."""
+    from repro.models.lm import (_block, _layer_schedule, _layer_split,
+                                 _ropes)
+    cfg = model.cfg
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    from repro.nn.layers import embedding_apply
+    x = embedding_apply(params["embed"], jnp.asarray(tokens)).astype(dtype)
+    if cfg.scale_embed:
+        x = x * (cfg.d_model ** 0.5)
+    s = x.shape[1]
+    (cg, sg), (cl, sl) = _ropes(cfg, s, dtype)
+    win, rsel = _layer_schedule(cfg, s)
+    win, rsel = np.asarray(win), np.asarray(rsel)
+    n_self, _ = _layer_split(cfg)
+    for i in range(n_self):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        collector.id2path = _walk_dense_ids(lp, ("layers",))
+        cos, sin = ((cl, sl) if rsel[i] == 1 else (cg, sg))
+        x, _, _ = _block(cfg, lp, x, cos, sin, jnp.int32(win[i]), False)
+    return x
+
+
+def _weight_only(stats: Dict[str, CalibStats], fp_params, bits, a_absmax):
+    """Fallback sensitivity: weight-quantization MSE scaled by an assumed
+    unit activation second moment; a_absmax stays at the config default."""
+    for path, st in stats.items():
+        node = fp_params
+        for part in path.split("/"):
+            node = node[part]
+        w = jnp.asarray(node["w"], jnp.float32)
+        w2 = w.reshape(-1, w.shape[-1]) if w.ndim == 3 else w
+        st.a_absmax = a_absmax
+        st.sq_ref += float(jnp.sum(w2 * w2))
+        for b in bits:
+            w_hat, scale = quantize_dense_weights(w2, b)
+            err = w_hat.astype(jnp.float32) * scale - w2
+            st.sq_err[b] = st.sq_err.get(b, 0.0) + float(jnp.sum(err * err))
+        st.taps += 1
+
+
+def calibrate(model, fp_params, token_batches: Sequence[np.ndarray], *,
+              bits: Sequence[int] = CANDIDATE_BITS, a_bits: int = 8,
+              max_rows: int = 512,
+              default_a_absmax: float = 4.0) -> Dict[str, CalibStats]:
+    """Run calibration batches through the fp model, returning per-dense
+    `CalibStats` keyed by param path. `token_batches`: (B, S) int32 arrays.
+    """
+    import dataclasses as _dc
+
+    from repro.models.api import Model
+    from repro.nn.layers import QuantConfig
+
+    cfg = model.cfg
+    q_defs = Model(_dc.replace(cfg, quant=QuantConfig(mode="int"),
+                               quant_plan=None)).defs()
+    paths = quantized_dense_paths(q_defs)
+    inv = dense_inventory(fp_params, paths)
+    stats = {p: CalibStats(p, *inv[p]) for p in paths}
+
+    if cfg.family == "lm" and not cfg.cross_every:
+        collector = _Collector(stats, bits, a_bits, max_rows)
+        with dense_tap(collector):
+            for toks in token_batches:
+                _replay_lm(model, fp_params, toks, collector)
+        # paths the replay never reaches (none today for plain LMs) fall
+        # back to weight-only so the planner always has full coverage
+        missed = {p: st for p, st in stats.items() if st.taps == 0}
+        if missed:
+            _weight_only(missed, fp_params, bits, default_a_absmax)
+    else:
+        _weight_only(stats, fp_params, bits, default_a_absmax)
+    return stats

@@ -1,0 +1,117 @@
+"""Bit-width search: assign W{8,4,2} per dense layer to minimize packed
+weight bytes subject to a total-sensitivity budget.
+
+Objective: the deployment memory-roofline term — packed weight HBM bytes
+(byte accounting via `launch/hlo_costs.py::shape_numel_bytes`, the same
+helper the dry-run cost model charges HBM traffic with). Decode serving is
+weight-streaming-bound, so packed bytes ~ time-per-token.
+
+Constraint: sum of per-path output-MSE sensitivity proxies (from
+`calibrate`) must stay <= budget.
+
+Search: greedy marginal-rate knapsack. Start everything at the widest
+candidate (8), repeatedly take the single one-step demotion (8->4 or 4->2)
+with the best bytes-saved-per-sensitivity-added ratio that still fits the
+budget. Monotone candidate chains make this the classic 2-approximation;
+at per-matrix-group granularity (a handful to a few dozen paths) it is
+effectively exact and deterministic.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+from repro.core import packing
+from repro.deploy.calibrate import CANDIDATE_BITS, CalibStats
+from repro.deploy.policy import PlanRule, PrecisionPlan
+from repro.launch.hlo_costs import shape_numel_bytes
+
+
+def packed_weight_bytes(layers: int, d_in: int, d_out: int,
+                        w_bits: int) -> int:
+    """HBM bytes of one dense path's packed weights (int8 containers,
+    chunk-planar along the padded K axis) + its f32 per-channel scales."""
+    kp = packing.padded_size(d_in) // packing.pack_factor(w_bits)
+    _, wb = shape_numel_bytes(f"s8[{layers},{kp},{d_out}]")
+    _, sb = shape_numel_bytes(f"f32[{layers},{d_out}]")
+    return wb + sb
+
+
+def _path_bytes(st: CalibStats, bits: int) -> int:
+    return packed_weight_bytes(st.layers, st.d_in, st.d_out, bits)
+
+
+def auto_budget(stats: Dict[str, CalibStats],
+                candidates: Sequence[int] = CANDIDATE_BITS,
+                frac: float = 0.5) -> float:
+    """A budget `frac` of the way between the all-widest total sensitivity
+    and the all-narrowest one — guaranteed to admit some demotions and
+    (for any non-degenerate sensitivity spread) to forbid others."""
+    hi_b, lo_b = max(candidates), min(candidates)
+    base = sum(st.sens(hi_b) for st in stats.values())
+    full = sum(st.sens(lo_b) for st in stats.values())
+    return base + frac * (full - base)
+
+
+def plan_mixed_precision(stats: Dict[str, CalibStats], budget: float, *,
+                         candidates: Sequence[int] = CANDIDATE_BITS,
+                         a_bits: int = 8, use_kernel: bool = False,
+                         meta: Optional[dict] = None) -> PrecisionPlan:
+    """Greedy knapsack over calibration stats -> serializable plan."""
+    cand = sorted(set(candidates), reverse=True)      # e.g. [8, 4, 2]
+    if not cand:
+        raise ValueError("no candidate bit-widths")
+    assign = {p: cand[0] for p in stats}
+    total = sum(stats[p].sens(cand[0]) for p in stats)
+
+    def next_bits(b: int) -> Optional[int]:
+        i = cand.index(b)
+        return cand[i + 1] if i + 1 < len(cand) else None
+
+    while True:
+        best, best_rate = None, -1.0
+        for p, b in assign.items():
+            nb = next_bits(b)
+            if nb is None:
+                continue
+            d_sens = stats[p].sens(nb) - stats[p].sens(b)
+            d_bytes = _path_bytes(stats[p], b) - _path_bytes(stats[p], nb)
+            if d_bytes <= 0:
+                continue
+            if total + max(d_sens, 0.0) > budget:
+                continue
+            rate = d_bytes / max(d_sens, 1e-12)
+            if rate > best_rate:
+                best, best_rate = (p, nb, d_sens), rate
+        if best is None:
+            break
+        p, nb, d_sens = best
+        assign[p] = nb
+        total += d_sens
+
+    table = {p: {
+        "w_bits": assign[p],
+        "layers": stats[p].layers, "d_in": stats[p].d_in,
+        "d_out": stats[p].d_out,
+        "a_absmax": round(stats[p].a_absmax, 6),
+        "sens": {str(b): stats[p].sens(b) for b in cand},
+        "bytes": {str(b): _path_bytes(stats[p], b) for b in cand},
+    } for p in sorted(stats)}
+    plan_meta = {
+        "budget": budget,
+        "total_sensitivity": total,
+        "packed_weight_bytes": sum(
+            _path_bytes(stats[p], assign[p]) for p in stats),
+        "uniform_w8_bytes": sum(
+            _path_bytes(stats[p], cand[0]) for p in stats),
+        "paths": table,
+    }
+    if meta:
+        plan_meta.update(meta)
+    rules = tuple(
+        PlanRule(pattern=p, w_bits=assign[p], a_bits=a_bits,
+                 use_kernel=use_kernel,
+                 a_absmax=(round(stats[p].a_absmax, 6)
+                           if stats[p].a_absmax > 0 else None))
+        for p in sorted(stats))
+    return PrecisionPlan(rules=rules, default_w_bits=cand[0],
+                         default_a_bits=a_bits, meta=plan_meta)

@@ -1,0 +1,120 @@
+"""Per-layer precision policy: param-path pattern -> {w_bits, a_bits, ...}.
+
+A `PrecisionPlan` is the serializable deployment artifact of the
+mixed-precision flow (calibrate -> plan -> pack -> serve). Each rule maps an
+fnmatch pattern over "/"-joined parameter paths (the path of the *dense
+subtree*, e.g. ``layers/mlp/wi`` or ``dec_layers/xattn/w*``) to the
+bit-widths that dense layer serves at. Layer stacks are scanned
+(`stack_defs`), so one path names one dense matrix group across the whole
+depth — exactly the granularity at which packed shapes must stay uniform
+for `jax.lax.scan`.
+
+Plans are frozen/hashable (they ride inside the frozen `ModelConfig`) and
+round-trip through JSON (`save_plan`/`load_plan`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import pathlib
+from typing import Optional, Tuple
+
+from repro.nn.layers import QuantConfig
+
+PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRule:
+    """One policy entry: first matching pattern wins."""
+
+    pattern: str                       # fnmatch over "/"-joined dense path
+    w_bits: int
+    a_bits: int = 8
+    use_kernel: bool = False
+    a_absmax: Optional[float] = None   # calibrated static activation absmax
+
+    def matches(self, path: str) -> bool:
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    rules: Tuple[PlanRule, ...] = ()
+    default_w_bits: int = 8
+    default_a_bits: int = 8
+    # report/debug payload (per-path sensitivities, byte accounting, budget);
+    # excluded from eq/hash so the plan stays usable inside frozen configs
+    meta: dict = dataclasses.field(default_factory=dict, compare=False)
+
+    def rule_for(self, path: str) -> Optional[PlanRule]:
+        for r in self.rules:
+            if r.matches(path):
+                return r
+        return None
+
+    def resolve(self, path: str, base: QuantConfig) -> QuantConfig:
+        """Per-dense QuantConfig for ``path``; ``base`` supplies mode and
+        unspecified fields (no matching rule -> plan defaults)."""
+        r = self.rule_for(path)
+        if r is None:
+            return dataclasses.replace(
+                base, w_bits=self.default_w_bits, a_bits=self.default_a_bits)
+        return dataclasses.replace(
+            base, w_bits=r.w_bits, a_bits=r.a_bits, use_kernel=r.use_kernel,
+            a_absmax=r.a_absmax if r.a_absmax is not None else base.a_absmax)
+
+    def distinct_w_bits(self) -> Tuple[int, ...]:
+        return tuple(sorted({r.w_bits for r in self.rules}
+                            | {self.default_w_bits}))
+
+    # ------------------------------------------------------------- json ---
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": PLAN_VERSION,
+            "default": {"w_bits": self.default_w_bits,
+                        "a_bits": self.default_a_bits},
+            "rules": [{
+                "pattern": r.pattern, "w_bits": r.w_bits, "a_bits": r.a_bits,
+                "use_kernel": r.use_kernel, "a_absmax": r.a_absmax,
+            } for r in self.rules],
+            "meta": self.meta,
+        }, indent=2, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "PrecisionPlan":
+        d = json.loads(text)
+        if d.get("version") != PLAN_VERSION:
+            raise ValueError(f"unsupported plan version {d.get('version')}")
+        rules = tuple(PlanRule(
+            pattern=r["pattern"], w_bits=int(r["w_bits"]),
+            a_bits=int(r.get("a_bits", 8)),
+            use_kernel=bool(r.get("use_kernel", False)),
+            a_absmax=(None if r.get("a_absmax") is None
+                      else float(r["a_absmax"])),
+        ) for r in d.get("rules", []))
+        default = d.get("default", {})
+        return PrecisionPlan(
+            rules=rules,
+            default_w_bits=int(default.get("w_bits", 8)),
+            default_a_bits=int(default.get("a_bits", 8)),
+            meta=d.get("meta", {}))
+
+
+def resolve_qcfg(plan: Optional[PrecisionPlan], path: str,
+                 base: QuantConfig) -> QuantConfig:
+    """Per-dense QuantConfig resolution used throughout nn/: identity when
+    no plan is active (the uniform `ModelConfig.quant` path)."""
+    if plan is None:
+        return base
+    return plan.resolve(path, base)
+
+
+def save_plan(plan: PrecisionPlan, path) -> None:
+    pathlib.Path(path).write_text(plan.to_json())
+
+
+def load_plan(path) -> PrecisionPlan:
+    return PrecisionPlan.from_json(pathlib.Path(path).read_text())

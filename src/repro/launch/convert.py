@@ -2,35 +2,26 @@
 the paper integrates into, §V-B): walk an fp parameter tree, quantize and
 chunk-planar-pack every dense weight, and emit the int-mode parameter tree
 the serving path consumes.
+
+The uniform single-bit-width entry point below is a thin wrapper over the
+mixed-precision converter (`repro.deploy.apply.apply_plan`), which walks
+with parameter paths and resolves per-dense bit-widths from a
+`PrecisionPlan` — `plan=None` degenerates to uniform `w_bits` everywhere.
 """
 from __future__ import annotations
 
-import jax
-
-from repro.nn.layers import pack_dense_weights
+from repro.deploy.apply import apply_plan
+from repro.nn.module import param_bytes
 
 
 def convert_params(q_tree, fp_tree, w_bits: int):
     """Fill an int-mode parameter tree (zeros-initialized `w_packed` /
-    `w_scale` leaves) from the fp checkpoint tree. Stacked (scanned) layer
-    weights are vmapped over the layer dim."""
-    if isinstance(q_tree, dict) and "w_packed" in q_tree:
-        w = fp_tree["w"]
-        if w.ndim == 3:   # (layers, K, N) stacked
-            packed, scale = jax.vmap(
-                lambda ww: pack_dense_weights(ww, w_bits))(w)
-        else:
-            packed, scale = pack_dense_weights(w, w_bits)
-        out = dict(q_tree, w_packed=packed, w_scale=scale)
-        if "b" in q_tree and "b" in fp_tree:
-            out["b"] = fp_tree["b"]
-        return out
-    if isinstance(q_tree, dict):
-        return {k: (convert_params(q_tree[k], fp_tree[k], w_bits)
-                    if k in fp_tree else q_tree[k]) for k in q_tree}
-    # non-dense leaves (norms, embeddings, router, conv, ...) pass through
-    return fp_tree
+    `w_scale` leaves) from the fp checkpoint tree at one uniform bit-width.
+    Stacked (scanned) layer weights pack along their own K axis."""
+    return apply_plan(q_tree, fp_tree, None, w_bits)
 
 
 def artifact_bytes(params) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    """Total bytes of a (packed or fp) parameter tree — one accounting
+    (`nn/module.py::param_bytes`) shared by converter, engine, and CLIs."""
+    return param_bytes(params)

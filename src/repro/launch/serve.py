@@ -4,6 +4,13 @@ requests through the engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --quant w4a8 --requests 8 --max-new 16
+
+Mixed-precision serving: pass a deployment plan produced by
+`python -m repro.launch.deploy` and each dense layer is packed at its
+plan-resolved bit-width instead of one uniform --quant:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --plan plan.json --requests 8
 """
 from __future__ import annotations
 
@@ -25,6 +32,9 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--quant", default="off", help="off | w8a8 | w4a8 ...")
+    ap.add_argument("--plan", default=None,
+                    help="mixed-precision plan JSON (repro.launch.deploy); "
+                         "overrides --quant")
     ap.add_argument("--kv-bits", type=int, default=16, choices=[16, 8])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
@@ -50,24 +60,41 @@ def main():
     else:
         fp_params = fp_model.init(jax.random.PRNGKey(args.seed))
 
-    if args.quant != "off":
+    plan = None
+    if args.plan:
+        from repro.deploy.apply import apply_plan
+        from repro.deploy.policy import load_plan
+        plan = load_plan(args.plan)
+        qcfg = QuantConfig(mode="int", w_bits=plan.default_w_bits,
+                           a_bits=plan.default_a_bits)
+        cfg_q = dataclasses.replace(cfg, quant=qcfg, quant_plan=plan)
+        model = build(cfg_q)
+        params = apply_plan(model.init(jax.random.PRNGKey(0)), fp_params,
+                            plan, plan.default_w_bits)
+        mode = f"plan:{args.plan} w_bits={plan.distinct_w_bits()}"
+    elif args.quant != "off":
         qcfg = QuantConfig(mode="int", w_bits=int(args.quant[1]),
                            a_bits=int(args.quant[3]))
         cfg_q = dataclasses.replace(cfg, quant=qcfg)
         model = build(cfg_q)
         params = convert_params(model.init(jax.random.PRNGKey(0)),
                                 fp_params, qcfg.w_bits)
+        mode = args.quant
     else:
         model, params = fp_model, fp_params
+        mode = "off"
 
-    pbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
-    print(f"{cfg.name} [{args.quant}] params {pbytes / 2**20:.1f} MiB")
+    from repro.nn.module import param_bytes
+    pbytes = param_bytes(params)
+    print(f"{cfg.name} [{mode}] params {pbytes / 2**20:.1f} MiB "
+          f"({pbytes:,} bytes)")
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(2, cfg.vocab, size=(
         int(rng.integers(2, 8)),)).astype(np.int32),
         max_new_tokens=args.max_new) for _ in range(args.requests)]
-    eng = Engine(model, params, batch_size=args.batch, max_len=args.max_len)
+    eng = Engine(model, params, batch_size=args.batch, max_len=args.max_len,
+                 plan=plan)
     t0 = time.time()
     out = eng.generate(reqs)
     dt = time.time() - t0

@@ -23,18 +23,18 @@ from repro.nn.module import stack_defs
 
 def _enc_layer_def(cfg, dtype):
     return {"ln1": norm_def(cfg.d_model, cfg.norm, dtype),
-            "attn": attn_def(_attn_cfg(cfg), dtype),
+            "attn": attn_def(_attn_cfg(cfg, "enc_layers/attn"), dtype),
             "ln2": norm_def(cfg.d_model, cfg.norm, dtype),
-            "mlp": mlp_def(_mlp_cfg(cfg), dtype)}
+            "mlp": mlp_def(_mlp_cfg(cfg, "enc_layers/mlp"), dtype)}
 
 
 def _dec_layer_def(cfg, dtype):
     return {"ln1": norm_def(cfg.d_model, cfg.norm, dtype),
-            "attn": attn_def(_attn_cfg(cfg), dtype),
+            "attn": attn_def(_attn_cfg(cfg, "dec_layers/attn"), dtype),
             "lnx": norm_def(cfg.d_model, cfg.norm, dtype),
-            "xattn": attn_def(_attn_cfg(cfg), dtype),
+            "xattn": attn_def(_attn_cfg(cfg, "dec_layers/xattn"), dtype),
             "ln2": norm_def(cfg.d_model, cfg.norm, dtype),
-            "mlp": mlp_def(_mlp_cfg(cfg), dtype)}
+            "mlp": mlp_def(_mlp_cfg(cfg, "dec_layers/mlp"), dtype)}
 
 
 def encdec_def(cfg: ModelConfig, dtype=jnp.float32):
@@ -52,14 +52,14 @@ def encode(params, src_embed, cfg: ModelConfig):
     x = src_embed.astype(dtype)
     s = x.shape[1]
     cos, sin = rope_tables(s, cfg.head_dim_, cfg.rope_theta, dtype)
-    acfg = _attn_cfg(cfg)
+    acfg = _attn_cfg(cfg, "enc_layers/attn")
 
     def body(x, lp):
         h, _ = attn_apply(lp["attn"], norm_apply(lp.get("ln1", {}), x, cfg.norm),
                           acfg, cos=cos, sin=sin, mode="bidir")
         x = x + h
         x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
-                          _mlp_cfg(cfg))
+                          _mlp_cfg(cfg, "enc_layers/mlp"))
         return x, None
 
     body = jax.checkpoint(body) if cfg.remat else body
@@ -73,19 +73,20 @@ def decode_train(params, enc_out, tokens, cfg: ModelConfig):
     b, s = tokens.shape
     x = embedding_apply(params["embed"], tokens).astype(dtype)
     cos, sin = rope_tables(s, cfg.head_dim_, cfg.rope_theta, dtype)
-    acfg = _attn_cfg(cfg)
+    acfg = _attn_cfg(cfg, "dec_layers/attn")
+    acfg_x = _attn_cfg(cfg, "dec_layers/xattn")
 
     def body(x, lp):
         h, _ = attn_apply(lp["attn"], norm_apply(lp.get("ln1", {}), x, cfg.norm),
                           acfg, cos=cos, sin=sin, mode="causal")
         x = x + h
-        src_kv = cross_kv_project(lp["xattn"], enc_out, acfg)
+        src_kv = cross_kv_project(lp["xattn"], enc_out, acfg_x)
         h, _ = attn_apply(lp["xattn"], norm_apply(lp.get("lnx", {}), x, cfg.norm),
-                          acfg, cos=None, sin=None, mode="bidir",
+                          acfg_x, cos=None, sin=None, mode="bidir",
                           cross_kv=src_kv)
         x = x + h
         x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
-                          _mlp_cfg(cfg))
+                          _mlp_cfg(cfg, "dec_layers/mlp"))
         return x, None
 
     body = jax.checkpoint(body) if cfg.remat else body
@@ -121,7 +122,8 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
     """Single decoder token step using cached self+cross K/V."""
     dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
     x = embedding_apply(params["embed"], token).astype(dtype)
-    acfg = _attn_cfg(cfg)
+    acfg = _attn_cfg(cfg, "dec_layers/attn")
+    acfg_x = _attn_cfg(cfg, "dec_layers/xattn")
 
     def body(x, per_layer):
         lp, kv_l, xkv = per_layer
@@ -130,11 +132,11 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
                              acfg, theta=cfg.rope_theta, mode="causal")
         x = x + h
         h, _ = attn_decode(lp["xattn"], norm_apply(lp.get("lnx", {}), x, cfg.norm),
-                           None, index, acfg, mode="bidir",
+                           None, index, acfg_x, mode="bidir",
                            cross_kv=(xkv[0], xkv[1]))
         x = x + h
         x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
-                          _mlp_cfg(cfg))
+                          _mlp_cfg(cfg, "dec_layers/mlp"))
         return x, nkv
 
     x, new_kv = jax.lax.scan(body, x, (params["dec_layers"], cache["kv"],

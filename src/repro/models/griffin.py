@@ -23,7 +23,8 @@ from repro.nn.rglru import (RglruConfig, rglru_block_apply,
 
 def _rcfg(cfg: ModelConfig) -> RglruConfig:
     return RglruConfig(cfg.d_model, cfg.lru_width or cfg.d_model,
-                       cfg.d_conv, cfg.quant)
+                       cfg.d_conv, cfg.quant, cfg.quant_plan,
+                       "rec_layers/rec")
 
 
 def _group_counts(cfg: ModelConfig):
@@ -37,14 +38,14 @@ def _rec_layer_def(cfg, dtype):
     return {"ln": norm_def(cfg.d_model, cfg.norm, dtype),
             "rec": rglru_block_def(_rcfg(cfg), dtype),
             "ln2": norm_def(cfg.d_model, cfg.norm, dtype),
-            "mlp": mlp_def(_mlp_cfg(cfg), dtype)}
+            "mlp": mlp_def(_mlp_cfg(cfg, "rec_layers/mlp"), dtype)}
 
 
 def _attn_layer_def(cfg, dtype):
     return {"ln": norm_def(cfg.d_model, cfg.norm, dtype),
-            "attn": attn_def(_attn_cfg(cfg), dtype),
+            "attn": attn_def(_attn_cfg(cfg, "attn_layers/attn"), dtype),
             "ln2": norm_def(cfg.d_model, cfg.norm, dtype),
-            "mlp": mlp_def(_mlp_cfg(cfg), dtype)}
+            "mlp": mlp_def(_mlp_cfg(cfg, "attn_layers/mlp"), dtype)}
 
 
 def griffin_def(cfg: ModelConfig, dtype=jnp.float32):
@@ -64,17 +65,17 @@ def _rec_block(cfg, lp, x):
     x = x + rglru_block_apply(lp["rec"], norm_apply(lp.get("ln", {}), x, cfg.norm),
                               _rcfg(cfg))
     x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
-                      _mlp_cfg(cfg))
+                      _mlp_cfg(cfg, "rec_layers/mlp"))
     return x
 
 
 def _attn_block(cfg, lp, x, cos, sin):
     h, _ = attn_apply(lp["attn"], norm_apply(lp.get("ln", {}), x, cfg.norm),
-                      _attn_cfg(cfg), cos=cos, sin=sin, mode="local",
-                      window=cfg.window)
+                      _attn_cfg(cfg, "attn_layers/attn"), cos=cos, sin=sin,
+                      mode="local", window=cfg.window)
     x = x + h
     x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
-                      _mlp_cfg(cfg))
+                      _mlp_cfg(cfg, "attn_layers/mlp"))
     return x
 
 
@@ -119,7 +120,7 @@ def griffin_init_cache(cfg: ModelConfig, batch: int, max_len: int,
                        dtype=jnp.bfloat16):
     ng, tail = _group_counts(cfg)
     nrg = sum(1 for k in cfg.rnn_pattern if k == "rec")
-    acfg = _attn_cfg(cfg)
+    acfg = _attn_cfg(cfg, "attn_layers/attn")
     # local attention only needs `window` KV slots, but decode uses absolute
     # positions; keep window-sized ring handled as full buffer of max_len
     # capped at window for memory (ring indexing = index % window).
@@ -143,7 +144,7 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
         x = x * (cfg.d_model ** 0.5)
     ng, tail = _group_counts(cfg)
     nrg = sum(1 for k in cfg.rnn_pattern if k == "rec")
-    acfg = _attn_cfg(cfg)
+    acfg = _attn_cfg(cfg, "attn_layers/attn")
 
     rec_grouped = jax.tree.map(
         lambda a: a[:ng * nrg].reshape(ng, nrg, *a.shape[1:]), cache["rec"])
@@ -162,7 +163,7 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
             x2 = x2 + h
             x2 = x2 + mlp_apply(lp["mlp"],
                                 norm_apply(lp.get("ln2", {}), x2, cfg.norm),
-                                _mlp_cfg(cfg))
+                                _mlp_cfg(cfg, "rec_layers/mlp"))
             return x2, nc
 
         x, nrc = jax.lax.scan(inner, x, (rp, rc))
@@ -172,7 +173,7 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
             ring=True)
         x = x + h
         x = x + mlp_apply(ap["mlp"], norm_apply(ap.get("ln2", {}), x, cfg.norm),
-                          _mlp_cfg(cfg))
+                          _mlp_cfg(cfg, "attn_layers/mlp"))
         return x, (nrc, nkv)
 
     ap_stack = params["attn_layers"]
@@ -188,7 +189,7 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
             lp["rec"], norm_apply(lp.get("ln", {}), x, cfg.norm), c_l, _rcfg(cfg))
         x = x + h
         x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
-                          _mlp_cfg(cfg))
+                          _mlp_cfg(cfg, "rec_layers/mlp"))
         return x, nc
 
     x, new_rec_t = jax.lax.scan(tail_body, x, (rec_tail_p, rec_tail_c))

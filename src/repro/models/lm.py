@@ -26,21 +26,24 @@ from repro.nn.module import stack_defs
 from repro.parallel.ctx import constrain
 
 
-def _attn_cfg(cfg: ModelConfig) -> AttnConfig:
+def _attn_cfg(cfg: ModelConfig, path: str = "layers/attn") -> AttnConfig:
+    """`path` locates this block in the param tree so the mixed-precision
+    plan (cfg.quant_plan) can resolve per-projection bit-widths."""
     return AttnConfig(cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim_,
                       qkv_bias=cfg.qkv_bias, kv_quant_bits=cfg.kv_quant_bits,
-                      qcfg=cfg.quant)
+                      qcfg=cfg.quant, plan=cfg.quant_plan, path=path)
 
 
-def _mlp_cfg(cfg: ModelConfig) -> MlpConfig:
-    return MlpConfig(cfg.d_model, cfg.d_ff, cfg.act, cfg.quant)
+def _mlp_cfg(cfg: ModelConfig, path: str = "layers/mlp") -> MlpConfig:
+    return MlpConfig(cfg.d_model, cfg.d_ff, cfg.act, cfg.quant,
+                     cfg.quant_plan, path)
 
 
-def _moe_cfg(cfg: ModelConfig) -> MoeConfig:
+def _moe_cfg(cfg: ModelConfig, path: str = "layers/moe") -> MoeConfig:
     m = cfg.moe
     return MoeConfig(cfg.d_model, m.d_ff, m.n_experts, m.top_k,
                      m.capacity_factor, m.group_size, m.shared_expert,
-                     cfg.act, cfg.quant)
+                     cfg.act, cfg.quant, cfg.quant_plan, path)
 
 
 def _layer_def(cfg: ModelConfig, dtype):
@@ -56,9 +59,9 @@ def _layer_def(cfg: ModelConfig, dtype):
 
 def _cross_layer_def(cfg: ModelConfig, dtype):
     return {"ln1": norm_def(cfg.d_model, cfg.norm, dtype),
-            "xattn": attn_def(_attn_cfg(cfg), dtype),
+            "xattn": attn_def(_attn_cfg(cfg, "cross_layers/xattn"), dtype),
             "ln2": norm_def(cfg.d_model, cfg.norm, dtype),
-            "mlp": mlp_def(_mlp_cfg(cfg), dtype)}
+            "mlp": mlp_def(_mlp_cfg(cfg, "cross_layers/mlp"), dtype)}
 
 
 def lm_def(cfg: ModelConfig, dtype=jnp.float32):
@@ -128,11 +131,11 @@ def _block(cfg, lp, x, cos, sin, window, collect_kv):
 
 def _cross_block(cfg, lp, x, src_kv):
     h, _ = attn_apply(lp["xattn"], norm_apply(lp.get("ln1", {}), x, cfg.norm),
-                      _attn_cfg(cfg), cos=None, sin=None, mode="bidir",
-                      cross_kv=src_kv)
+                      _attn_cfg(cfg, "cross_layers/xattn"), cos=None, sin=None,
+                      mode="bidir", cross_kv=src_kv)
     x = x + h
     x = x + mlp_apply(lp["mlp"], norm_apply(lp.get("ln2", {}), x, cfg.norm),
-                      _mlp_cfg(cfg))
+                      _mlp_cfg(cfg, "cross_layers/mlp"))
     return x
 
 
@@ -153,7 +156,7 @@ def forward(params, tokens, cfg: ModelConfig, *, src_embed=None,
     win, rsel = _layer_schedule(cfg, s)
 
     n_self, n_cross = _layer_split(cfg)
-    acfg = _attn_cfg(cfg)
+    acfg = _attn_cfg(cfg, "cross_layers/xattn")  # only used for cross K/V
 
     if n_cross == 0:
         def body(carry, per_layer):
@@ -254,6 +257,7 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
     win, rsel = _layer_schedule(cfg, max_len)
     n_self, n_cross = _layer_split(cfg)
     acfg = _attn_cfg(cfg)
+    acfg_x = _attn_cfg(cfg, "cross_layers/xattn")
 
     if n_cross == 0:
         def body(x, per_layer):
@@ -303,10 +307,10 @@ def decode_step(params, cache, token, index, cfg: ModelConfig, *,
             x, nkvg = jax.lax.scan(inner, x, (gp, kvg, w_g, r_g))
             h, _ = attn_decode(
                 xp["xattn"], norm_apply(xp.get("ln1", {}), x, cfg.norm), None, index,
-                acfg, mode="bidir", cross_kv=(xkv[0], xkv[1]))
+                acfg_x, mode="bidir", cross_kv=(xkv[0], xkv[1]))
             x = x + h
             x = x + mlp_apply(xp["mlp"], norm_apply(xp.get("ln2", {}), x, cfg.norm),
-                              _mlp_cfg(cfg))
+                              _mlp_cfg(cfg, "cross_layers/mlp"))
             return x, nkvg
 
         x, new_kvg = jax.lax.scan(

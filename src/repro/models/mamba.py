@@ -15,7 +15,8 @@ from repro.nn.ssm import (MambaConfig, mamba_apply, mamba_decode, mamba_def,
 
 def _mcfg(cfg: ModelConfig) -> MambaConfig:
     return MambaConfig(cfg.d_model, cfg.d_state, cfg.d_conv, cfg.expand,
-                       cfg.headdim, cfg.ssd_chunk, cfg.quant)
+                       cfg.headdim, cfg.ssd_chunk, cfg.quant,
+                       cfg.quant_plan, "layers/mixer")
 
 
 def mamba_lm_def(cfg: ModelConfig, dtype=jnp.float32):

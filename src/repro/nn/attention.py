@@ -13,6 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.deploy.policy import PrecisionPlan, resolve_qcfg
 from repro.nn.layers import (QuantConfig, QOFF, dense_apply, dense_def,
                              rope_apply, rope_single)
 from repro.parallel.ctx import active_mesh, constrain, constrain_first
@@ -29,22 +30,29 @@ class AttnConfig:
     qkv_bias: bool = False        # qwen2.5
     kv_quant_bits: int = 16       # 16 (bf16) | 8 (int8 cache)
     qcfg: QuantConfig = QOFF
+    # mixed-precision deployment: per-projection override of qcfg resolved
+    # by this block's param path + projection name (wq/wk/wv/wo)
+    plan: Optional[PrecisionPlan] = None
+    path: str = "layers/attn"
 
     @property
     def groups(self):
         return self.n_heads // self.kv_heads
+
+    def q(self, name: str) -> QuantConfig:
+        return resolve_qcfg(self.plan, f"{self.path}/{name}", self.qcfg)
 
 
 def attn_def(cfg: AttnConfig, dtype=jnp.float32):
     d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
     return {
         "wq": dense_def(d, h * dh, ("embed", "heads"), bias=cfg.qkv_bias,
-                        qcfg=cfg.qcfg, dtype=dtype),
+                        qcfg=cfg.q("wq"), dtype=dtype),
         "wk": dense_def(d, hk * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias,
-                        qcfg=cfg.qcfg, dtype=dtype),
+                        qcfg=cfg.q("wk"), dtype=dtype),
         "wv": dense_def(d, hk * dh, ("embed", "kv_heads"), bias=cfg.qkv_bias,
-                        qcfg=cfg.qcfg, dtype=dtype),
-        "wo": dense_def(h * dh, d, ("heads", "embed"), qcfg=cfg.qcfg,
+                        qcfg=cfg.q("wv"), dtype=dtype),
+        "wo": dense_def(h * dh, d, ("heads", "embed"), qcfg=cfg.q("wo"),
                         dtype=dtype),
     }
 
@@ -145,12 +153,12 @@ def attn_apply(p, x, cfg: AttnConfig, *, cos, sin, mode="causal",
     """
     b, s, _ = x.shape
     h, hk, dh, g = cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.groups
-    q = _split_heads(dense_apply(p["wq"], x, qcfg=cfg.qcfg), h, dh)
+    q = _split_heads(dense_apply(p["wq"], x, qcfg=cfg.q("wq")), h, dh)
     t_len = x.shape[1] if cross_kv is None else cross_kv[0].shape[1]
     strat = attn_strategy(hk, g, s, t_len, batch=b)
     if cross_kv is None:
-        k = _split_heads(dense_apply(p["wk"], x, qcfg=cfg.qcfg), hk, dh)
-        v = _split_heads(dense_apply(p["wv"], x, qcfg=cfg.qcfg), hk, dh)
+        k = _split_heads(dense_apply(p["wk"], x, qcfg=cfg.q("wk")), hk, dh)
+        v = _split_heads(dense_apply(p["wv"], x, qcfg=cfg.q("wv")), hk, dh)
         kv_axes = {"tp": ("batch", None, "kv_heads", None),
                    "gp": ("batch", None, None, None),
                    "bp": ("batch_full", None, None, None),
@@ -173,15 +181,15 @@ def attn_apply(p, x, cfg: AttnConfig, *, cos, sin, mode="causal",
     mask = _mask_full(s, t, mode, window)[None, None, None]
     out = _sdpa(q, k, v, mask, strat)
     out = out.reshape(b, s, h * dh)
-    y = dense_apply(p["wo"], out, qcfg=cfg.qcfg)
+    y = dense_apply(p["wo"], out, qcfg=cfg.q("wo"))
     return constrain(y, ("batch", None, None)), (k, v)
 
 
 def cross_kv_project(p, enc_out, cfg: AttnConfig):
     """Project encoder states once; reused across decode steps."""
     hk, dh = cfg.kv_heads, cfg.head_dim
-    k = _split_heads(dense_apply(p["wk"], enc_out, qcfg=cfg.qcfg), hk, dh)
-    v = _split_heads(dense_apply(p["wv"], enc_out, qcfg=cfg.qcfg), hk, dh)
+    k = _split_heads(dense_apply(p["wk"], enc_out, qcfg=cfg.q("wk")), hk, dh)
+    v = _split_heads(dense_apply(p["wv"], enc_out, qcfg=cfg.q("wv")), hk, dh)
     return k, v
 
 
@@ -204,10 +212,10 @@ def attn_decode(p, x, cache, index, cfg: AttnConfig, *, theta=10000.0,
     """
     b = x.shape[0]
     h, hk, dh, g = cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.groups
-    q = _split_heads(dense_apply(p["wq"], x, qcfg=cfg.qcfg), h, dh)
+    q = _split_heads(dense_apply(p["wq"], x, qcfg=cfg.q("wq")), h, dh)
     if cross_kv is None:
-        k_new = _split_heads(dense_apply(p["wk"], x, qcfg=cfg.qcfg), hk, dh)
-        v_new = _split_heads(dense_apply(p["wv"], x, qcfg=cfg.qcfg), hk, dh)
+        k_new = _split_heads(dense_apply(p["wk"], x, qcfg=cfg.q("wk")), hk, dh)
+        v_new = _split_heads(dense_apply(p["wv"], x, qcfg=cfg.q("wv")), hk, dh)
         q = rope_single(q, index, theta)
         k_new = rope_single(k_new, index, theta)
         kq = _kv_store(k_new, cfg.kv_quant_bits)
@@ -241,4 +249,4 @@ def attn_decode(p, x, cache, index, cfg: AttnConfig, *, theta=10000.0,
     mask = allow[:, None, None, None, :]  # (B,1,1,1,T) / (1,...)
     out = _sdpa(q, k, v, mask, strat)
     out = out.reshape(b, 1, h * dh)
-    return dense_apply(p["wo"], out, qcfg=cfg.qcfg), cache
+    return dense_apply(p["wo"], out, qcfg=cfg.q("wo")), cache

@@ -8,8 +8,9 @@ pipeline adapted to TPU (see DESIGN.md §2).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +28,11 @@ class QuantConfig:
     # static activation scale (absmax) used in int mode; per-tensor dynamic
     # quantization when None (max computed on the fly; costs a reduction)
     a_absmax: Optional[float] = 4.0
-    use_kernel: bool = False  # Pallas kernel (interpret) vs XLA-native path
+    # Pallas kernel (interpret) vs XLA-native path. Honored by the kernel
+    # op wrappers (kernels/qmatmul, kernels/qconv); dense_apply's int path
+    # is always XLA-native (the production lowering) — the flag is carried
+    # through deployment plans for call sites that do route kernels.
+    use_kernel: bool = False
 
     @property
     def enabled(self):
@@ -35,6 +40,26 @@ class QuantConfig:
 
 
 QOFF = QuantConfig()
+
+
+# Calibration tap: when set, dense_apply calls it with (params, x) before
+# the matmul. The deploy calibrator uses this to record per-dense activation
+# absmax and bit-width sensitivity during an *eager* replay — callbacks get
+# concrete arrays only when no jit/scan tracing is active, so taps are for
+# host-side calibration passes, never inside compiled training/serving.
+_DENSE_TAP: Optional[Callable] = None
+
+
+@contextlib.contextmanager
+def dense_tap(fn: Callable):
+    """Install ``fn(params_dict, x)`` as the dense-apply observer."""
+    global _DENSE_TAP
+    prev = _DENSE_TAP
+    _DENSE_TAP = fn
+    try:
+        yield
+    finally:
+        _DENSE_TAP = prev
 
 
 # ---------------------------------------------------------------- dense ---
@@ -56,6 +81,8 @@ def dense_def(d_in: int, d_out: int, axes=("embed", "mlp"), *,
 
 def dense_apply(p, x, *, qcfg: QuantConfig = QOFF, precision=None):
     """x: (..., d_in) bf16/f32 -> (..., d_out)."""
+    if _DENSE_TAP is not None:
+        _DENSE_TAP(p, x)
     if qcfg.mode == "int":
         y = _int_matmul(p, x, qcfg)
     elif qcfg.mode == "fake":
@@ -72,17 +99,19 @@ def dense_apply(p, x, *, qcfg: QuantConfig = QOFF, precision=None):
 
 
 def _int_matmul(p, x, qcfg: QuantConfig):
-    """W{8,4,2}A8 integer GEMM with dequant epilogue (XLA-native path).
+    """W{8,4,2}A{8,4,2} integer GEMM with dequant epilogue (XLA-native).
 
     Packed weights are unpacked to int8 next to the MXU; activations are
-    symmetrically quantized to int8 with a static scale. HBM traffic for
-    weights is 1/pf of the bf16 baseline — the paper's sub-byte gain mapped
-    to the TPU memory roofline term.
+    symmetrically quantized onto the a_bits grid (int8 containers, so A8
+    caps at ±127) with a static scale. HBM traffic for weights is 1/pf of
+    the bf16 baseline — the paper's sub-byte gain mapped to the TPU memory
+    roofline term.
     """
     d_in = x.shape[-1]
     absmax = qcfg.a_absmax or 4.0
-    a_scale = absmax / 127.0
-    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / a_scale), -127, 127
+    a_max = packing.int_range(qcfg.a_bits, True)[1]  # A8 caps at 127 (int8)
+    a_scale = absmax / a_max
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / a_scale), -a_max, a_max
                    ).astype(jnp.int8)
     x_q = packing.pad_to_chunk(x_q, axis=-1)
     w_int = packing.unpack(p["w_packed"], qcfg.w_bits, True, axis=0)
@@ -93,18 +122,29 @@ def _int_matmul(p, x, qcfg: QuantConfig):
     return (acc.astype(jnp.float32) * scale).astype(x.dtype)
 
 
-def pack_dense_weights(w, w_bits: int):
-    """fp weights (K,N) -> (w_packed, w_scale) for int-mode params
-    (per-output-channel symmetric grids)."""
-    absmax = jnp.max(jnp.abs(w), axis=0)
-    absmax = jnp.maximum(absmax, 1e-8)
-    int_max = packing.int_range(w_bits, True)[1] if w_bits == 8 else (
-        (1 << (w_bits - 1)) - 1)
+def quantize_dense_weights(w, w_bits: int):
+    """fp weights (..., K, N) -> (w_hat int8 in-range, w_scale (..., N))
+    on per-output-channel symmetric grids. Leading dims (a stacked layer
+    axis) broadcast — no vmap needed, so host paths can range-check the
+    whole stack before packing."""
+    red = w.ndim - 2  # K axis
+    absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=red), 1e-8)
+    int_max = packing.int_range(w_bits, True)[1]
     w_scale = absmax / int_max
-    w_hat = jnp.clip(jnp.round(w / w_scale), -int_max, int_max
-                     ).astype(jnp.int8)
-    w_hat = packing.pad_to_chunk(w_hat, axis=0)
-    return packing.pack(w_hat, w_bits, axis=0), w_scale
+    w_hat = jnp.clip(jnp.round(w / jnp.expand_dims(w_scale, red)),
+                     -int_max, int_max).astype(jnp.int8)
+    return w_hat, w_scale
+
+
+def pack_dense_weights(w, w_bits: int, *, assert_range: bool = False):
+    """fp weights (K,N) or stacked (L,K,N) -> (w_packed, w_scale) for
+    int-mode params. ``assert_range`` enables the host-side truncation
+    guard (eager only)."""
+    w_hat, w_scale = quantize_dense_weights(w, w_bits)
+    red = w.ndim - 2
+    w_hat = packing.pad_to_chunk(w_hat, axis=red)
+    return packing.pack(w_hat, w_bits, axis=red,
+                        assert_range=assert_range), w_scale
 
 
 # ------------------------------------------------------------ embedding ---

@@ -10,10 +10,12 @@ memory-bound, so packed int4/int2 experts cut the dominant roofline term by
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.deploy.policy import PrecisionPlan, resolve_qcfg
 from repro.nn.layers import QOFF, QuantConfig, dense_apply, dense_def
 from repro.nn.module import ParamDef
 from repro.parallel.ctx import constrain
@@ -25,17 +27,24 @@ class MlpConfig:
     d_ff: int
     act: str = "swiglu"          # swiglu | geglu | gelu
     qcfg: QuantConfig = QOFF
+    # mixed-precision deployment: per-dense override of qcfg, resolved by
+    # this block's param path (e.g. "layers/mlp") + the dense name
+    plan: Optional[PrecisionPlan] = None
+    path: str = "layers/mlp"
+
+    def q(self, name: str) -> QuantConfig:
+        return resolve_qcfg(self.plan, f"{self.path}/{name}", self.qcfg)
 
 
 def mlp_def(cfg: MlpConfig, dtype=jnp.float32):
     gated = cfg.act in ("swiglu", "geglu")
     p = {"wi": dense_def(cfg.d_model, cfg.d_ff, ("embed", "mlp"),
-                         qcfg=cfg.qcfg, dtype=dtype),
+                         qcfg=cfg.q("wi"), dtype=dtype),
          "wo": dense_def(cfg.d_ff, cfg.d_model, ("mlp", "embed"),
-                         qcfg=cfg.qcfg, dtype=dtype)}
+                         qcfg=cfg.q("wo"), dtype=dtype)}
     if gated:
         p["wg"] = dense_def(cfg.d_model, cfg.d_ff, ("embed", "mlp"),
-                            qcfg=cfg.qcfg, dtype=dtype)
+                            qcfg=cfg.q("wg"), dtype=dtype)
     return p
 
 
@@ -48,12 +57,12 @@ def _act(h, g, kind):
 
 
 def mlp_apply(p, x, cfg: MlpConfig):
-    h = constrain(dense_apply(p["wi"], x, qcfg=cfg.qcfg),
+    h = constrain(dense_apply(p["wi"], x, qcfg=cfg.q("wi")),
                   ("batch", None, "mlp"))
-    g = dense_apply(p["wg"], x, qcfg=cfg.qcfg) if "wg" in p else None
+    g = dense_apply(p["wg"], x, qcfg=cfg.q("wg")) if "wg" in p else None
     if g is not None:
         g = constrain(g, ("batch", None, "mlp"))
-    y = dense_apply(p["wo"], _act(h, g, cfg.act), qcfg=cfg.qcfg)
+    y = dense_apply(p["wo"], _act(h, g, cfg.act), qcfg=cfg.q("wo"))
     return constrain(y, ("batch", None, None))
 
 
@@ -70,6 +79,8 @@ class MoeConfig:
     shared_expert: bool = True
     act: str = "swiglu"
     qcfg: QuantConfig = QOFF
+    plan: Optional[PrecisionPlan] = None
+    path: str = "layers/moe"
 
     def capacity(self, tokens_per_group: int) -> int:
         c = int(tokens_per_group * self.top_k * self.capacity_factor
@@ -91,7 +102,8 @@ def moe_def(cfg: MoeConfig, dtype=jnp.float32):
     }
     if cfg.shared_expert:
         p["shared"] = mlp_def(
-            MlpConfig(d, f, cfg.act, cfg.qcfg), dtype)
+            MlpConfig(d, f, cfg.act, cfg.qcfg, cfg.plan,
+                      f"{cfg.path}/shared"), dtype)
     return p
 
 
@@ -175,7 +187,8 @@ def moe_apply(p, x, cfg: MoeConfig):
 
     if cfg.shared_expert:
         y = y + mlp_apply(p["shared"], x,
-                          MlpConfig(cfg.d_model, cfg.d_ff, cfg.act, cfg.qcfg))
+                          MlpConfig(cfg.d_model, cfg.d_ff, cfg.act, cfg.qcfg,
+                                    cfg.plan, f"{cfg.path}/shared"))
 
     # Switch aux loss: e * sum_e(frac_tokens_e * frac_probs_e)
     frac_tok = jnp.mean(onehot[:, :, 0].astype(jnp.float32), axis=1)  # (g,e)

@@ -12,6 +12,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.deploy.policy import PrecisionPlan, resolve_qcfg
 from repro.nn.layers import QOFF, QuantConfig, dense_apply, dense_def
 from repro.nn.module import ParamDef
 from repro.parallel.ctx import constrain
@@ -25,29 +26,36 @@ class RglruConfig:
     lru_width: int
     d_conv: int = 4
     qcfg: QuantConfig = QOFF
+    plan: "PrecisionPlan | None" = None
+    path: str = "rec_layers/rec"
+
+    def q(self, name: str) -> QuantConfig:
+        return resolve_qcfg(self.plan, f"{self.path}/{name}", self.qcfg)
 
 
 def rglru_block_def(cfg: RglruConfig, dtype=jnp.float32):
     d, w = cfg.d_model, cfg.lru_width
     return {
-        "in_x": dense_def(d, w, ("embed", "mlp"), qcfg=cfg.qcfg, dtype=dtype),
-        "in_gate": dense_def(d, w, ("embed", "mlp"), qcfg=cfg.qcfg,
+        "in_x": dense_def(d, w, ("embed", "mlp"), qcfg=cfg.q("in_x"),
+                          dtype=dtype),
+        "in_gate": dense_def(d, w, ("embed", "mlp"), qcfg=cfg.q("in_gate"),
                              dtype=dtype),
         "conv_w": ParamDef((cfg.d_conv, w), (None, "mlp"), "normal", dtype),
         "conv_b": ParamDef((w,), ("mlp",), "zeros", dtype),
-        "w_a": dense_def(w, w, ("mlp", "mlp2"), bias=True, qcfg=cfg.qcfg,
+        "w_a": dense_def(w, w, ("mlp", "mlp2"), bias=True, qcfg=cfg.q("w_a"),
                          dtype=dtype),
-        "w_i": dense_def(w, w, ("mlp", "mlp2"), bias=True, qcfg=cfg.qcfg,
+        "w_i": dense_def(w, w, ("mlp", "mlp2"), bias=True, qcfg=cfg.q("w_i"),
                          dtype=dtype),
         "lam": ParamDef((w,), ("mlp",), "scalar:0.5", jnp.float32),
-        "out": dense_def(w, d, ("mlp", "embed"), qcfg=cfg.qcfg, dtype=dtype),
+        "out": dense_def(w, d, ("mlp", "embed"), qcfg=cfg.q("out"),
+                         dtype=dtype),
     }
 
 
 def _gates(p, x, cfg):
-    r = jax.nn.sigmoid(dense_apply(p["w_a"], x, qcfg=cfg.qcfg)
+    r = jax.nn.sigmoid(dense_apply(p["w_a"], x, qcfg=cfg.q("w_a"))
                        .astype(jnp.float32))
-    i = jax.nn.sigmoid(dense_apply(p["w_i"], x, qcfg=cfg.qcfg)
+    i = jax.nn.sigmoid(dense_apply(p["w_i"], x, qcfg=cfg.q("w_i"))
                        .astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(p["lam"])[None, :] * r
     a = jnp.exp(log_a)
@@ -63,9 +71,9 @@ def _conv_causal(u, w, b):
 def rglru_block_apply(p, xin, cfg: RglruConfig):
     """Full-sequence recurrent block. xin: (B,L,d)."""
     gate = constrain(
-        jax.nn.gelu(dense_apply(p["in_gate"], xin, qcfg=cfg.qcfg)),
+        jax.nn.gelu(dense_apply(p["in_gate"], xin, qcfg=cfg.q("in_gate"))),
         ("batch", None, "mlp"))
-    x = constrain(dense_apply(p["in_x"], xin, qcfg=cfg.qcfg),
+    x = constrain(dense_apply(p["in_x"], xin, qcfg=cfg.q("in_x")),
                   ("batch", None, "mlp"))
     x = _conv_causal(x, p["conv_w"].astype(xin.dtype),
                      p["conv_b"].astype(xin.dtype))
@@ -78,7 +86,7 @@ def rglru_block_apply(p, xin, cfg: RglruConfig):
         return al * ar, ar * bl + br
     _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
     y = (h.astype(xin.dtype) * gate)
-    return dense_apply(p["out"], y, qcfg=cfg.qcfg)
+    return dense_apply(p["out"], y, qcfg=cfg.q("out"))
 
 
 def rglru_init_cache(cfg: RglruConfig, batch: int, dtype=jnp.float32):
@@ -90,13 +98,13 @@ def rglru_init_cache(cfg: RglruConfig, batch: int, dtype=jnp.float32):
 
 def rglru_block_decode(p, xin, cache, cfg: RglruConfig):
     """Single-token decode. xin: (B,1,d)."""
-    gate = jax.nn.gelu(dense_apply(p["in_gate"], xin, qcfg=cfg.qcfg))[:, 0]
-    x = dense_apply(p["in_x"], xin, qcfg=cfg.qcfg)[:, 0]
+    gate = jax.nn.gelu(dense_apply(p["in_gate"], xin, qcfg=cfg.q("in_gate")))[:, 0]
+    x = dense_apply(p["in_x"], xin, qcfg=cfg.q("in_x"))[:, 0]
     conv_buf = jnp.concatenate([cache["conv"], x[:, None, :]], axis=1)
     w = p["conv_w"].astype(xin.dtype)
     xc = jnp.einsum("bkc,kc->bc", conv_buf, w) + p["conv_b"].astype(xin.dtype)
     a, bx_gate = _gates(p, xc, cfg)
     h = a * cache["h"] + bx_gate * xc.astype(jnp.float32)
     y = (h.astype(xin.dtype) * gate)
-    out = dense_apply(p["out"], y[:, None, :], qcfg=cfg.qcfg)
+    out = dense_apply(p["out"], y[:, None, :], qcfg=cfg.q("out"))
     return out, {"conv": conv_buf[:, 1:], "h": h}

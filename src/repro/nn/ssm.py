@@ -13,6 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.deploy.policy import PrecisionPlan, resolve_qcfg
 from repro.nn.layers import QOFF, QuantConfig, dense_apply, dense_def
 from repro.nn.module import ParamDef
 from repro.parallel.ctx import constrain
@@ -27,10 +28,15 @@ class MambaConfig:
     headdim: int = 64
     chunk: int = 256
     qcfg: QuantConfig = QOFF
+    plan: "PrecisionPlan | None" = None
+    path: str = "layers/mixer"
 
     @property
     def d_inner(self):
         return self.expand * self.d_model
+
+    def q(self, name: str) -> QuantConfig:
+        return resolve_qcfg(self.plan, f"{self.path}/{name}", self.qcfg)
 
     @property
     def n_heads(self):
@@ -46,7 +52,7 @@ def mamba_def(cfg: MambaConfig, dtype=jnp.float32):
     d_in_proj = 2 * di + 2 * n + h  # z, x, B, C, dt
     return {
         "in_proj": dense_def(cfg.d_model, d_in_proj, ("embed", "mlp"),
-                             qcfg=cfg.qcfg, dtype=dtype),
+                             qcfg=cfg.q("in_proj"), dtype=dtype),
         "conv_w": ParamDef((cfg.d_conv, cfg.conv_dim), (None, "mlp"),
                            "normal", dtype),
         "conv_b": ParamDef((cfg.conv_dim,), ("mlp",), "zeros", dtype),
@@ -55,7 +61,7 @@ def mamba_def(cfg: MambaConfig, dtype=jnp.float32):
         "dt_bias": ParamDef((h,), (None,), "zeros", jnp.float32),
         "norm_scale": ParamDef((di,), ("mlp",), "ones", dtype),
         "out_proj": dense_def(di, cfg.d_model, ("mlp", "embed"),
-                              qcfg=cfg.qcfg, dtype=dtype),
+                              qcfg=cfg.q("out_proj"), dtype=dtype),
     }
 
 
@@ -153,7 +159,7 @@ def mamba_apply(p, xin, cfg: MambaConfig):
     """Full-sequence forward. xin: (B,L,d_model)."""
     bs, l, _ = xin.shape
     di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
-    zxbcdt = dense_apply(p["in_proj"], xin, qcfg=cfg.qcfg)
+    zxbcdt = dense_apply(p["in_proj"], xin, qcfg=cfg.q("in_proj"))
     z, xbc, dt = _split_proj(zxbcdt, cfg)
     xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(xin.dtype),
                                    p["conv_b"].astype(xin.dtype)))
@@ -184,7 +190,7 @@ def mamba_apply(p, xin, cfg: MambaConfig):
                   ("batch", None, "mlp"))
     y = y * jax.nn.silu(z)
     y = _rms(y, p["norm_scale"])
-    return dense_apply(p["out_proj"], y, qcfg=cfg.qcfg)
+    return dense_apply(p["out_proj"], y, qcfg=cfg.q("out_proj"))
 
 
 def _rms(x, scale, eps=1e-6):
@@ -206,7 +212,7 @@ def mamba_decode(p, xin, cache, cfg: MambaConfig):
     """Single-token decode. xin: (B,1,d_model). O(1) state update."""
     bs = xin.shape[0]
     di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.headdim
-    zxbcdt = dense_apply(p["in_proj"], xin, qcfg=cfg.qcfg)
+    zxbcdt = dense_apply(p["in_proj"], xin, qcfg=cfg.q("in_proj"))
     z, xbc, dt = _split_proj(zxbcdt[:, 0], cfg)
     conv_buf = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
     w = p["conv_w"].astype(xin.dtype)
@@ -225,5 +231,5 @@ def mamba_decode(p, xin, cache, cfg: MambaConfig):
     y = y.reshape(bs, di).astype(xin.dtype)
     y = y * jax.nn.silu(z)
     y = _rms(y, p["norm_scale"])
-    out = dense_apply(p["out_proj"], y[:, None, :], qcfg=cfg.qcfg)
+    out = dense_apply(p["out_proj"], y[:, None, :], qcfg=cfg.q("out_proj"))
     return out, {"conv": new_conv, "ssm": ssm}

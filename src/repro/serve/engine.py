@@ -26,13 +26,21 @@ class Request:
 
 class Engine:
     def __init__(self, model: Model, params, batch_size: int,
-                 max_len: int, eos_id: int = 1):
+                 max_len: int, eos_id: int = 1, plan=None):
+        """`plan`: optional mixed-precision `PrecisionPlan` the params were
+        packed with (repro.deploy) — kept for introspection/reporting; the
+        packed shapes themselves already encode the per-layer bit-widths."""
         self.model = model
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.eos = eos_id
+        self.plan = plan
         self._decode = jax.jit(model.decode)
+
+    def artifact_bytes(self) -> int:
+        from repro.nn.module import param_bytes
+        return param_bytes(self.params)
 
     def _prefill_scored(self, prompts):
         """Prefill via teacher-forced forward, then replay tokens into the
@@ -59,6 +67,7 @@ class Engine:
         while queue:
             wave = queue[: self.batch]
             queue = queue[self.batch:]
+            n_real = len(wave)  # pads below must never reach `done`
             while len(wave) < self.batch:  # pad the last wave
                 wave.append(Request(prompt=np.array([0], np.int32),
                                     max_new_tokens=1))
@@ -87,8 +96,11 @@ class Engine:
                     self.params, cache, jnp.asarray(nxt[:, None]),
                     jnp.int32(pos + step))
                 step += 1
-            for r, o in zip(wave[: len(prompts)], outs):
+            for r, o in zip(wave, outs):
                 r.out = np.array(o, np.int32)
-            done.extend(w for w in wave if w.max_new_tokens > 1 or w.out is
-                        not None)
-        return done[: len(requests)]
+            # only the real requests of this wave — the old
+            # `max_new_tokens > 1 or out is not None` filter is always true
+            # once outputs are assigned, so pad fillers leaked into `done`
+            # and the final truncation could drop real requests behind them
+            done.extend(wave[:n_real])
+        return done

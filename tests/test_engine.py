@@ -24,6 +24,31 @@ def test_generate_greedy():
         assert (r.out >= 0).all() and (r.out < cfg.vocab).all()
 
 
+def test_generate_multiwave_pads_never_leak():
+    """requests % batch != 0: the last wave is padded with filler requests;
+    `generate` must return exactly the caller's request objects, in order —
+    the old `max_new_tokens > 1 or out is not None` filter admitted pads
+    once outputs were assigned."""
+    cfg = smoke_config()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, batch_size=2, max_len=32)
+    reqs = [Request(prompt=np.array([3 + i, 5], np.int32),
+                    max_new_tokens=(1 if i == 0 else 3))  # real max_new=1 too
+            for i in range(5)]
+    out = eng.generate(reqs)
+    assert len(out) == 5
+    # identity, not just count: every returned object IS an input request
+    for got, want in zip(out, reqs):
+        assert got is want
+        assert got.out is not None and len(got.out) <= got.max_new_tokens
+    # single-prompt pathological case: one request, batch 4
+    eng4 = Engine(model, params, batch_size=4, max_len=32)
+    solo = [Request(prompt=np.array([7], np.int32), max_new_tokens=2)]
+    out4 = eng4.generate(solo)
+    assert len(out4) == 1 and out4[0] is solo[0]
+
+
 def test_generate_deterministic():
     cfg = smoke_config()
     model = build(cfg)

@@ -29,3 +29,26 @@ def test_serve_cli():
               "--quant", "w4a8", "--requests", "2", "--batch", "2",
               "--max-new", "4"])
     assert "tok/s" in r.stdout, r.stderr[-1500:]
+
+
+def test_deploy_then_serve_plan_cli(tmp_path):
+    """calibrate -> plan -> pack via the deploy CLI, then serve the plan:
+    mixed artifact must be strictly smaller than the uniform-w8 one."""
+    plan = tmp_path / "plan.json"
+    r = _run(["repro.launch.deploy", "--arch", "qwen2.5-3b", "--smoke",
+              "--budget", "auto", "--out", str(plan)])
+    assert "deploy done" in r.stdout, r.stderr[-1500:]
+    import json
+    import re
+    d = json.loads(plan.read_text())
+    assert len({rule["w_bits"] for rule in d["rules"]}) >= 2
+    m = re.search(r"uniform-w8 ([\d,]+)\s+mixed ([\d,]+)", r.stdout)
+    assert m, r.stdout
+    w8, mixed = (int(g.replace(",", "")) for g in m.groups())
+    assert mixed < w8
+    r2 = _run(["repro.launch.serve", "--arch", "qwen2.5-3b", "--smoke",
+               "--plan", str(plan), "--requests", "3", "--batch", "2",
+               "--max-new", "4"])
+    assert "tok/s" in r2.stdout, r2.stderr[-1500:]
+    m2 = re.search(r"\((\d[\d,]*) bytes\)", r2.stdout)
+    assert m2 and int(m2.group(1).replace(",", "")) == mixed

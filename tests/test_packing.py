@@ -62,6 +62,36 @@ def test_planar_order_matches_perm(bits, rng):
     assert np.array_equal(planar, x[packing.planar_perm(k, bits)])
 
 
+@pytest.mark.parametrize("bits", [4, 2])
+def test_pack_assert_range_raises_instead_of_truncating(bits, rng):
+    """Out-of-range values raise with the host-side guard armed — without
+    it `pack` keeps only the low bits and silently corrupts the artifact."""
+    lo, hi = packing.int_range(bits, True)
+    ok = rng.integers(lo, hi + 1, size=(256,)).astype(np.int8)
+    bad = ok.copy()
+    bad[13] = hi + 1  # truncates to a *different valid value* without guard
+    # guard off: silent truncation (documents the failure mode)
+    corrupted = packing.unpack(packing.pack(jnp.asarray(bad), bits), bits,
+                               True)
+    assert not np.array_equal(np.asarray(corrupted), bad)
+    # guard on: raises, and in-range packing is unchanged
+    with pytest.raises(ValueError, match="silently truncate"):
+        packing.pack(jnp.asarray(bad), bits, assert_range=True)
+    a = packing.pack(jnp.asarray(ok), bits)
+    b = packing.pack(jnp.asarray(ok), bits, assert_range=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_assert_range_unsigned_grid():
+    x = jnp.asarray(np.array([0, 15, -1], np.int8))
+    with pytest.raises(ValueError, match="unsigned"):
+        packing.pack(packing.pad_to_chunk(x), 4, assert_range=True,
+                     signed=False)
+    with pytest.raises(ValueError):  # 15 valid unsigned, not signed
+        packing.pack(packing.pad_to_chunk(jnp.asarray(
+            np.array([0, 15], np.int8))), 4, assert_range=True, signed=True)
+
+
 def test_pad_to_chunk():
     x = jnp.ones((3, 200), jnp.int8)
     y = packing.pad_to_chunk(x, axis=-1)

@@ -25,6 +25,35 @@ def test_requant_exact_vs_int64(phi, m, d):
     assert got == want
 
 
+def test_requant_exact_boundaries_exhaustive_d():
+    """Deterministic (hypothesis-free) sweep: every d in [16, 31] crossed
+    with the m = 2^15 - 1 boundary (and neighbors) at extreme phi values —
+    the int32 split must match the int64 oracle at every corner."""
+    phis = [-(2**31), -(2**31) + 1, -(2**16) - 1, -(2**16), -1, 0, 1,
+            2**16 - 1, 2**16, 2**31 - 1]
+    ms = [0, 1, 2**14, 2**15 - 2, 2**15 - 1]  # multiplier cap M_BITS=15
+    for d in range(16, 32):
+        for m in ms:
+            for phi in phis:
+                got = int(np.asarray(requantize_shift(
+                    jnp.int32(phi), jnp.int32(m), d)))
+                want = int(requantize_shift_i64(phi, m, d))
+                assert got == want, (phi, m, d)
+
+
+def test_requant_vectorized_boundary_grid(rng):
+    """requantize_shift over whole arrays at the m boundary (the kernel
+    epilogue applies it per-channel, not per-scalar)."""
+    phi = rng.integers(-2**31, 2**31, size=(64, 32), dtype=np.int64
+                       ).astype(np.int32)
+    m = np.full((32,), 2**15 - 1, np.int32)
+    for d in (16, 23, 31):
+        got = np.asarray(requantize_shift(jnp.asarray(phi), jnp.asarray(m),
+                                          d))
+        want = requantize_shift_i64(phi, m, d)
+        np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
 def test_quantspec_signed_symmetric():
     s = QuantSpec.weight(4, 1.0)
     assert s.int_min == -7 and s.int_max == 7
