@@ -28,7 +28,9 @@ def time_call(fn, *args, warmup=1, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def emit(name, us, derived=""):
+def emit(name, us, derived="", backend=""):
+    """`backend` names the kernel backend (repro.kernels.api) the row
+    measured, so the perf trajectory can compare backends per row."""
     ROWS.append({"name": name, "us_per_call": round(float(us), 1),
-                 "derived": str(derived)})
-    print(f"{name},{us:.1f},{derived}")
+                 "derived": str(derived), "backend": str(backend)})
+    print(f"{name},{us:.1f},{derived},{backend}")

@@ -18,9 +18,14 @@ import jax.numpy as jnp
 
 from repro.core import (QuantSpec, quantize, calibrate_weight,
                         calibrate_activation)
-from repro.kernels.qconv import quantize_conv, qconv2d_apply, im2col_hwc
-from repro.kernels.qmatmul import qlinear_apply
+from repro.kernels.api import qconv, qdot
+from repro.kernels.qconv import quantize_conv, im2col_hwc
 from benchmarks.common import emit, time_call, PEAK_FLOPS, HBM_BW
+
+# the kernel-family backend CI/CPU runs can execute (the real `pallas`
+# backend asserts a TPU platform); rows carry it so trajectories are
+# comparable per backend
+BACKEND = "pallas_interpret"
 
 
 def run_layer(H, W, rng):
@@ -38,11 +43,11 @@ def run_layer(H, W, rng):
         xq = quantize(jnp.asarray(x), sx)
 
         us_full = time_call(
-            lambda xq=xq, qp=qp: qconv2d_apply(qp, xq, use_kernel=True))
+            lambda xq=xq, qp=qp: qconv(qp, xq, backend=BACKEND))
         cols, ho, wo = im2col_hwc(xq, 3, 3, 1, 1)
         us_mm = time_call(
-            lambda c=cols, qp=qp: qlinear_apply(qp.gemm, c.reshape(-1, 288),
-                                                use_kernel=True))
+            lambda c=cols, qp=qp: qdot(qp.gemm, c.reshape(-1, 288),
+                                       backend=BACKEND))
         # v5e projection: memory-bound at these sizes
         k_pad = 384
         bytes_hbm = (k_pad * Cout * bits // 8 + H * W * k_pad * bits // 8
@@ -50,9 +55,10 @@ def run_layer(H, W, rng):
         t_mem = bytes_hbm / HBM_BW
         t_cmp = 2 * macs / PEAK_FLOPS
         emit(f"fig11_conv{H}x{W}_{bits}bit_full", us_full,
-             f"v5e_us={max(t_mem,t_cmp)*1e6:.3f};macs={macs}")
+             f"v5e_us={max(t_mem,t_cmp)*1e6:.3f};macs={macs}",
+             backend=BACKEND)
         emit(f"fig11_conv{H}x{W}_{bits}bit_matmul_only", us_mm,
-             f"v5e_mem_term_us={t_mem*1e6:.3f}")
+             f"v5e_mem_term_us={t_mem*1e6:.3f}", backend=BACKEND)
 
 
 def main():

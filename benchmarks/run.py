@@ -1,9 +1,11 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows and writes the same data as
-machine-readable JSON (``--json``, default ``BENCH_kernels.json``:
-name -> us_per_call, plus the derived annotations under "derived") so CI
-can archive the perf trajectory run over run.
+Prints ``name,us_per_call,derived,backend`` CSV rows and writes the same
+data as machine-readable JSON (``--json``, default ``BENCH_kernels.json``:
+name -> us_per_call, plus the derived annotations under "derived" and the
+kernel backend measured under "backend") so CI can archive the perf
+trajectory run over run and compare backends per row. (Block-shape
+autotuning has its own CLI: ``python -m repro.kernels.tune``.)
 """
 import argparse
 import json
@@ -14,7 +16,7 @@ from benchmarks import (common, fig8_macs_per_issue, fig9_cluster_scaling,
 
 
 def main(json_path: str = "BENCH_kernels.json") -> None:
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,backend")
     fig8_macs_per_issue.main()
     fig9_cluster_scaling.main()
     fig11_conv_layers.main()
@@ -26,6 +28,8 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
                             for r in common.ROWS},
             "derived": {r["name"]: r["derived"] for r in common.ROWS
                         if r["derived"]},
+            "backend": {r["name"]: r["backend"] for r in common.ROWS
+                        if r.get("backend")},
         }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

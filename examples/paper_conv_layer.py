@@ -1,8 +1,9 @@
 """The paper's benchmark: conv layers (16x16x32 and 32x32x32 inputs,
 64x3x3x32 filters) at 8/4/2-bit, full integer pipeline (implicit-GEMM
-gather -> packed MatMul -> BN -> QNT/ACT). The kernel path is the fused
-implicit-GEMM Pallas kernel (no HBM im2col tensor); the jnp path is the
-explicit im2col + pure-jnp GEMM fallback — bit-exact against each other.
+gather -> packed MatMul -> BN -> QNT/ACT). The `pallas_interpret` backend
+is the fused implicit-GEMM Pallas kernel (no HBM im2col tensor); the
+`xla` backend is the explicit im2col + XLA GEMM fallback — bit-exact
+against each other (see repro.kernels.api for the backend registry).
 
     PYTHONPATH=src python examples/paper_conv_layer.py
 """
@@ -13,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core import (QuantSpec, quantize, calibrate_weight,
                         calibrate_activation)
-from repro.kernels.qconv import quantize_conv, qconv2d_apply
+from repro.kernels.api import qconv
+from repro.kernels.qconv import quantize_conv
 
 rng = np.random.default_rng(0)
 for H, W in [(16, 16), (32, 32)]:
@@ -28,8 +30,8 @@ for H, W in [(16, 16), (32, 32)]:
         sy = QuantSpec.activation(bits, 8.0)
         qp = quantize_conv(jnp.asarray(w), sw, bn_s, bn_b, sx, sy, 1, 1)
         xq = quantize(jnp.asarray(x), sx)
-        yk = qconv2d_apply(qp, xq, use_kernel=True)
-        yj = qconv2d_apply(qp, xq, use_kernel=False)
+        yk = qconv(qp, xq, backend="pallas_interpret")
+        yj = qconv(qp, xq, backend="xla")
         assert np.array_equal(np.asarray(yk), np.asarray(yj))
         wbytes = qp.gemm.w_packed.size
         print(f"conv {H}x{W}x32 {bits}-bit: out {tuple(yk.shape)} "

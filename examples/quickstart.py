@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.core import (QuantSpec, quantize, dequantize, quantize_linear,
                         calibrate_weight, calibrate_activation)
-from repro.kernels.qmatmul import qlinear_apply
+from repro.kernels.api import qdot
 
 rng = np.random.default_rng(0)
 K, N, M = 512, 128, 64
@@ -34,9 +34,11 @@ qparams = quantize_linear(jnp.asarray(w), sw, bn_s, bn_b, sx, sy)
 print(f"packed weights: {qparams.w_packed.shape} int8 "
       f"({qparams.w_packed.size / (K * N):.2%} of unpacked bytes)")
 
-# 3. integer forward: quantize activations -> packed GEMM -> 4-bit output
+# 3. integer forward: quantize activations -> packed GEMM -> 4-bit output.
+#    backend=None would resolve pallas-on-TPU / xla-elsewhere; we ask for
+#    the Pallas interpreter explicitly so the walkthrough runs anywhere.
 x_hat = quantize(jnp.asarray(x), sx)
-y_hat = qlinear_apply(qparams, x_hat, use_kernel=True)  # Pallas (interpret)
+y_hat = qdot(qparams, x_hat, backend="pallas_interpret")
 y_int = np.asarray(dequantize(y_hat, sy))
 
 rel = np.abs(y_int - y_float).max() / np.abs(y_float).max()

@@ -66,7 +66,7 @@ class ModelConfig:
     rnn_pattern: Tuple[str, ...] = ()  # e.g. ("rec","rec","attn")
     # quantization (the paper's technique). `quant` is the uniform/default
     # QuantConfig; `quant_plan` (mixed-precision deployment) overrides
-    # {w_bits, a_bits, use_kernel, a_absmax} per dense param path — see
+    # {w_bits, a_bits, backend, a_absmax} per dense param path — see
     # repro/deploy/policy.py. Packed param shapes follow the resolved bits.
     quant: QuantConfig = QOFF
     quant_plan: Optional[PrecisionPlan] = None

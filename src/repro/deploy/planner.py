@@ -54,9 +54,14 @@ def auto_budget(stats: Dict[str, CalibStats],
 
 def plan_mixed_precision(stats: Dict[str, CalibStats], budget: float, *,
                          candidates: Sequence[int] = CANDIDATE_BITS,
-                         a_bits: int = 8, use_kernel: bool = False,
+                         a_bits: int = 8, backend: Optional[str] = None,
                          meta: Optional[dict] = None) -> PrecisionPlan:
-    """Greedy knapsack over calibration stats -> serializable plan."""
+    """Greedy knapsack over calibration stats -> serializable plan.
+
+    ``backend`` names the kernel backend (repro.kernels.api) the plan's
+    rules route their quantized ops through; None defers to the registry's
+    capability-ordered default at serve time.
+    """
     cand = sorted(set(candidates), reverse=True)      # e.g. [8, 4, 2]
     if not cand:
         raise ValueError("no candidate bit-widths")
@@ -109,7 +114,7 @@ def plan_mixed_precision(stats: Dict[str, CalibStats], budget: float, *,
         plan_meta.update(meta)
     rules = tuple(
         PlanRule(pattern=p, w_bits=assign[p], a_bits=a_bits,
-                 use_kernel=use_kernel,
+                 backend=backend,
                  a_absmax=(round(stats[p].a_absmax, 6)
                            if stats[p].a_absmax > 0 else None))
         for p in sorted(stats))

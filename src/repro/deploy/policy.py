@@ -4,13 +4,19 @@ A `PrecisionPlan` is the serializable deployment artifact of the
 mixed-precision flow (calibrate -> plan -> pack -> serve). Each rule maps an
 fnmatch pattern over "/"-joined parameter paths (the path of the *dense
 subtree*, e.g. ``layers/mlp/wi`` or ``dec_layers/xattn/w*``) to the
-bit-widths that dense layer serves at. Layer stacks are scanned
-(`stack_defs`), so one path names one dense matrix group across the whole
-depth — exactly the granularity at which packed shapes must stay uniform
-for `jax.lax.scan`.
+bit-widths that dense layer serves at, plus the kernel ``backend`` the op
+registry (`repro.kernels.api`) should route it through. Layer stacks are
+scanned (`stack_defs`), so one path names one dense matrix group across the
+whole depth — exactly the granularity at which packed shapes must stay
+uniform for `jax.lax.scan`.
 
 Plans are frozen/hashable (they ride inside the frozen `ModelConfig`) and
-round-trip through JSON (`save_plan`/`load_plan`).
+round-trip through JSON (`save_plan`/`load_plan`). Schema v2 carries the
+``backend`` field; v1 plans (the pre-registry ``use_kernel`` boolean) load
+with a single DeprecationWarning and map True -> 'pallas_interpret',
+False -> 'xla' (the booleans were explicit path pins; the same mapping
+every shim uses) — re-save (e.g. via ``repro.launch.deploy --from-plan``)
+to upgrade the artifact.
 """
 from __future__ import annotations
 
@@ -18,11 +24,12 @@ import dataclasses
 import fnmatch
 import json
 import pathlib
+import warnings
 from typing import Optional, Tuple
 
 from repro.nn.layers import QuantConfig
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,8 +39,27 @@ class PlanRule:
     pattern: str                       # fnmatch over "/"-joined dense path
     w_bits: int
     a_bits: int = 8
-    use_kernel: bool = False
+    backend: Optional[str] = None      # kernel backend (repro.kernels.api)
     a_absmax: Optional[float] = None   # calibrated static activation absmax
+    # DEPRECATION SHIM: pre-registry boolean; normalized to None in
+    # __post_init__ after mapping onto `backend`.
+    use_kernel: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.use_kernel is not None:
+            if self.backend is not None:
+                raise ValueError(
+                    "pass either backend= or the deprecated use_kernel=, "
+                    "not both")
+            warnings.warn(
+                "PlanRule(use_kernel=...) is deprecated; pass backend=...",
+                DeprecationWarning, stacklevel=3)
+            # same mapping as every other shim: the booleans were explicit
+            # path pins, so False stays pinned to the XLA route
+            object.__setattr__(
+                self, "backend",
+                "pallas_interpret" if self.use_kernel else "xla")
+            object.__setattr__(self, "use_kernel", None)
 
     def matches(self, path: str) -> bool:
         return fnmatch.fnmatchcase(path, self.pattern)
@@ -62,7 +88,8 @@ class PrecisionPlan:
             return dataclasses.replace(
                 base, w_bits=self.default_w_bits, a_bits=self.default_a_bits)
         return dataclasses.replace(
-            base, w_bits=r.w_bits, a_bits=r.a_bits, use_kernel=r.use_kernel,
+            base, w_bits=r.w_bits, a_bits=r.a_bits,
+            backend=r.backend if r.backend is not None else base.backend,
             a_absmax=r.a_absmax if r.a_absmax is not None else base.a_absmax)
 
     def distinct_w_bits(self) -> Tuple[int, ...]:
@@ -78,7 +105,7 @@ class PrecisionPlan:
                         "a_bits": self.default_a_bits},
             "rules": [{
                 "pattern": r.pattern, "w_bits": r.w_bits, "a_bits": r.a_bits,
-                "use_kernel": r.use_kernel, "a_absmax": r.a_absmax,
+                "backend": r.backend, "a_absmax": r.a_absmax,
             } for r in self.rules],
             "meta": self.meta,
         }, indent=2, sort_keys=True)
@@ -86,15 +113,30 @@ class PrecisionPlan:
     @staticmethod
     def from_json(text: str) -> "PrecisionPlan":
         d = json.loads(text)
-        if d.get("version") != PLAN_VERSION:
-            raise ValueError(f"unsupported plan version {d.get('version')}")
+        version = d.get("version")
+        if version not in (1, PLAN_VERSION):
+            raise ValueError(f"unsupported plan version {version}")
+        raw_rules = d.get("rules", [])
+        if version == 1 or any("use_kernel" in r for r in raw_rules):
+            # one warning per artifact, not one per rule
+            warnings.warn(
+                "plan JSON uses the deprecated schema-v1 'use_kernel' "
+                "field; mapping True -> backend='pallas_interpret'. "
+                "Re-save (repro.launch.deploy --from-plan) to upgrade.",
+                DeprecationWarning, stacklevel=2)
+        def _backend(r):
+            if r.get("backend") is not None:
+                return r["backend"]
+            if "use_kernel" in r:   # v1: the boolean was an explicit pin
+                return "pallas_interpret" if r["use_kernel"] else "xla"
+            return None
         rules = tuple(PlanRule(
             pattern=r["pattern"], w_bits=int(r["w_bits"]),
             a_bits=int(r.get("a_bits", 8)),
-            use_kernel=bool(r.get("use_kernel", False)),
+            backend=_backend(r),
             a_absmax=(None if r.get("a_absmax") is None
                       else float(r["a_absmax"])),
-        ) for r in d.get("rules", []))
+        ) for r in raw_rules)
         default = d.get("default", {})
         return PrecisionPlan(
             rules=rules,

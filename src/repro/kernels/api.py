@@ -1,0 +1,453 @@
+"""Unified quantized-op backend API: one registry, one entry point per op.
+
+The paper's core contribution is *flexible* dispatch of sub-byte SIMD
+dot-product kernels across precisions; PULP-NN makes that usable with a
+kernel-library API where one entry point per op selects the backend. This
+module is that layer for the TPU repro. Backends register under
+``(op, name)`` for the ops ``qdot`` (packed sub-byte GEMM, eq. 2-4) and
+``qconv`` (fused implicit-GEMM conv), each exposing
+
+    supports(shape, a_bits, w_bits, platform) -> bool
+    run(params, x, *, epilogue, scale, block) -> array
+
+Registered backends:
+
+  pallas            real Mosaic/TPU Pallas kernel (asserts a TPU platform —
+                    no production call site can silently fall into
+                    interpret mode again)
+  pallas_interpret  the same kernel under the Pallas interpreter: the
+                    correctness/tests/dry-run backend, selected explicitly
+  xla               XLA-native unpack + int dot_general + fused epilogue —
+                    the production lowering off-TPU and for shapes the
+                    kernels reject
+  eager_ref         the independent numpy oracles (tests/debugging)
+
+Resolution order for the per-call backend: explicit ``backend=`` argument
+-> ``REPRO_QBACKEND`` env override -> capability-ordered default
+(``pallas`` where supported, i.e. on TPU, else ``xla``). Block shapes come
+from the per-(shape, bits, backend) autotune cache (`repro.kernels.tune`),
+falling back to the analytic `default_block`/`conv_default_block`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.kernels import tune
+from repro.kernels.common import apply_epilogue, round_up
+
+OPS = ("qdot", "qconv")
+ENV_VAR = "REPRO_QBACKEND"
+# capability-ordered default resolution; backends not listed here (the
+# interpreter, the numpy oracle) are only ever selected explicitly
+DEFAULT_ORDER: Tuple[str, ...] = ("pallas", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    op: str
+    name: str
+    supports: Callable  # (shape, a_bits, w_bits, platform) -> bool
+    run: Callable       # (params, x, *, epilogue, scale, block) -> array
+    doc: str = ""
+
+
+_REGISTRY: Dict[Tuple[str, str], BackendSpec] = {}
+
+
+def register(op: str, name: str, *, supports: Callable, run: Callable,
+             doc: str = "", override: bool = False) -> BackendSpec:
+    """Register a backend for ``op``; later kernels (fused-load qdot, GPU,
+    2-bit crumb paths) add themselves here instead of another boolean.
+    Re-registering an existing (op, name) raises unless ``override=True``
+    — silent replacement of a production backend is never an accident
+    worth allowing."""
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; ops: {OPS}")
+    if not override and (op, name) in _REGISTRY:
+        raise ValueError(
+            f"backend {name!r} already registered for op {op!r}; pass "
+            "override=True to replace it")
+    spec = BackendSpec(op=op, name=name, supports=supports, run=run, doc=doc)
+    _REGISTRY[(op, name)] = spec
+    return spec
+
+
+def backends(op: str) -> Tuple[str, ...]:
+    """Registered backend names for ``op`` (sorted)."""
+    return tuple(sorted(n for (o, n) in _REGISTRY if o == op))
+
+
+def get(op: str, name: str) -> BackendSpec:
+    spec = _REGISTRY.get((op, name))
+    if spec is None:
+        raise KeyError(
+            f"no backend {name!r} registered for op {op!r}; "
+            f"available: {list(backends(op))}")
+    return spec
+
+
+def platform() -> str:
+    return jax.default_backend()
+
+
+def resolve(op: str, shape, a_bits: int, w_bits: int, *,
+            backend: Optional[str] = None) -> BackendSpec:
+    """Pick the backend for one call.
+
+    Explicit ``backend`` -> ``REPRO_QBACKEND`` env override ->
+    capability-ordered default (first DEFAULT_ORDER entry whose
+    ``supports`` accepts this shape/bits/platform).
+    """
+    requested = backend or os.environ.get(ENV_VAR) or None
+    if requested:
+        return get(op, requested)
+    plat = platform()
+    for name in DEFAULT_ORDER:
+        spec = _REGISTRY.get((op, name))
+        if spec is not None and spec.supports(shape, a_bits, w_bits, plat):
+            return spec
+    raise RuntimeError(
+        f"no default backend supports op {op!r} shape {shape} "
+        f"A{a_bits}W{w_bits} on {plat!r}; registered: {list(backends(op))}")
+
+
+def default_backend(op: str, shape=None, a_bits: int = 8,
+                    w_bits: int = 8) -> str:
+    """Name the default resolution would pick (diagnostics/banners)."""
+    if shape is None:
+        shape = ((256, 1024, 1024) if op == "qdot"
+                 else (1, 16, 16, 32, 3, 3, 1, 1, 64))
+    return resolve(op, shape, a_bits, w_bits).name
+
+
+def registry_table() -> Tuple[Tuple[str, str, str], ...]:
+    """(op, backend, doc) rows for docs/CLIs."""
+    return tuple((op, name, _REGISTRY[(op, name)].doc)
+                 for (op, name) in sorted(_REGISTRY))
+
+
+def resolve_legacy_backend(backend: Optional[str],
+                           use_kernel: Optional[bool],
+                           interpret: Optional[bool]) -> Optional[str]:
+    """Deprecation shim shared by the op compat wrappers
+    (`qlinear_apply`, `qconv2d_apply`): map the pre-registry
+    ``use_kernel``/``interpret`` booleans onto a backend name.
+
+    True -> 'pallas_interpret' (the old default silently ran interpret
+    mode), True + interpret=False -> 'pallas', False -> 'xla'. Passing
+    both the new ``backend`` and a deprecated boolean is contradictory
+    and raises.
+    """
+    if use_kernel is None and interpret is None:
+        return backend
+    if backend is not None:
+        raise ValueError(
+            "pass either backend= or the deprecated use_kernel=/"
+            "interpret= booleans, not both")
+    warnings.warn(
+        "use_kernel=/interpret= are deprecated; pass backend="
+        "'pallas'|'pallas_interpret'|'xla'|'eager_ref' instead "
+        "(see repro.kernels.api)", DeprecationWarning, stacklevel=3)
+    uk = True if use_kernel is None else use_kernel
+    if not uk:
+        return "xla"
+    return "pallas" if interpret is False else "pallas_interpret"
+
+
+# ------------------------------------------------------- shared XLA core ---
+
+def xla_int_gemm(x_q, w_packed, *, w_bits: int, kappa=None, lam=None,
+                 m_mul=None, d: int = 0, out_bits: int = 8,
+                 epilogue: str = "int", scale=1.0, out_dtype=None):
+    """The one shared XLA int-GEMM + epilogue implementation.
+
+    x_q: (..., K_pad) int8 integer images (already on the a_bits grid);
+    w_packed: (K_pad/pf_w, N) chunk-planar packed weights. Unpack lowers to
+    XLA convert ops the TPU compiler fuses into the int dot. ``scale`` may
+    be a scalar or per-channel (N,) array (dequant epilogue). Used by the
+    ``xla`` qdot backend and by the nn dense int path — previously two
+    divergent copies (`qmatmul_jnp` vs `nn/layers._int_matmul`).
+    """
+    w = packing.unpack(w_packed, w_bits, True, axis=0)
+    acc = jax.lax.dot_general(
+        x_q, w, (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    if out_dtype is None:
+        out_dtype = {"int": jnp.int8, "dequant": jnp.bfloat16,
+                     "raw": jnp.int32}[epilogue]
+    return apply_epilogue(acc, kappa, lam, m_mul, d=d, out_bits=out_bits,
+                          epilogue=epilogue, scale=scale,
+                          out_dtype=out_dtype)
+
+
+# ------------------------------------------------------------ qdot entry ---
+
+def _flatten_lead(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _pad_axis(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _merge_hints(backend, block, plan_hints):
+    if plan_hints:
+        backend = backend or plan_hints.get("backend")
+        block = block or plan_hints.get("block")
+    return backend, block
+
+
+def qdot(params, x_hat, *, epilogue: str = "int", scale=1.0,
+         backend: Optional[str] = None, block: Optional[tuple] = None,
+         plan_hints: Optional[dict] = None):
+    """Quantized dot: integer-image activations x packed weights.
+
+    params: `QuantizedLinearParams`. x_hat: (..., K_logical) int8 integer
+    images (unpacked); padded to CHUNK and packed on the fly. Leading dims
+    are flattened for the GEMM and restored on the output.
+    """
+    x2, lead = _flatten_lead(x_hat)
+    x2 = packing.pad_to_chunk(x2, axis=-1)
+    xp = packing.pack(x2, params.a_bits, axis=-1)
+    out = qdot_packed(params, xp, epilogue=epilogue, scale=scale,
+                      backend=backend, block=block, plan_hints=plan_hints)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def qdot_packed(params, x_packed, *, epilogue: str = "int", scale=1.0,
+                backend: Optional[str] = None,
+                block: Optional[tuple] = None,
+                plan_hints: Optional[dict] = None):
+    """`qdot` over already-packed activations (fused chains where the
+    previous layer's epilogue emitted packed integer images)."""
+    backend, block = _merge_hints(backend, block, plan_hints)
+    m = x_packed.shape[0]
+    k = x_packed.shape[1] * packing.pack_factor(params.a_bits)
+    n = params.w_packed.shape[1]
+    spec = resolve("qdot", (m, k, n), params.a_bits, params.w_bits,
+                   backend=backend)
+    if block is None:
+        block = tune.get_block("qdot", (m, k, n), params.a_bits,
+                               params.w_bits, spec.name)
+    return spec.run(params, x_packed, epilogue=epilogue, scale=scale,
+                    block=block)
+
+
+# ----------------------------------------------------------- qconv entry ---
+
+def _conv_shape(params, x_hat):
+    n, h, w, cin = x_hat.shape
+    return (n, h, w, cin, params.fh, params.fw, params.stride,
+            params.padding, params.cout)
+
+
+def qconv(params, x_hat, *, epilogue: str = "int", scale=1.0,
+          backend: Optional[str] = None, block: Optional[tuple] = None,
+          plan_hints: Optional[dict] = None):
+    """Quantized HWC conv: (N, H, W, Cin) int8 images -> (N, Ho, Wo, Cout).
+
+    params: `QuantizedConvParams` (both weight layouts built by
+    `quantize_conv`, so every backend consumes bit-identical integers).
+    """
+    backend, block = _merge_hints(backend, block, plan_hints)
+    shape = _conv_shape(params, x_hat)
+    g = params.gemm
+    spec = resolve("qconv", shape, g.a_bits, g.w_bits, backend=backend)
+    if block is None:
+        block = tune.get_block("qconv", shape, g.a_bits, g.w_bits, spec.name)
+    return spec.run(params, x_hat, epilogue=epilogue, scale=scale,
+                    block=block)
+
+
+# -------------------------------------------------------- qdot backends ---
+
+def _require_tpu(name: str):
+    plat = platform()
+    if plat != "tpu":
+        raise RuntimeError(
+            f"backend {name!r} requires a real TPU/Mosaic platform "
+            f"(got {plat!r}); select 'pallas_interpret' explicitly for "
+            "interpreter-mode runs, or 'xla' for the native lowering")
+
+
+def _qdot_pallas(params, x_packed, *, epilogue, scale, block,
+                 interpret: bool):
+    """Pad M/N to the block multiples the kernel picks, run the Pallas
+    packed GEMM, slice back."""
+    from repro.kernels.qmatmul.kernel import default_block, qmatmul_packed
+
+    m = x_packed.shape[0]
+    k = x_packed.shape[1] * packing.pack_factor(params.a_bits)
+    n = params.w_packed.shape[1]
+    bm, bn, bk = block or default_block(m, n, k, params.a_bits,
+                                        params.w_bits)
+    bm = min(bm, round_up(m, 32))
+    xp = _pad_axis(x_packed, bm, 0)
+    wp = _pad_axis(params.w_packed, bn, 1)
+    kappa = _pad_axis(params.kappa, bn, 0)
+    lam = _pad_axis(params.lam, bn, 0)
+    mm = _pad_axis(params.m, bn, 0)
+    out = qmatmul_packed(
+        xp, wp, kappa, lam, mm, a_bits=params.a_bits,
+        a_signed=params.a_signed, w_bits=params.w_bits, d=params.d,
+        out_bits=params.out_bits, epilogue=epilogue, scale=scale,
+        block=(bm, bn, bk), interpret=interpret)
+    return out[:m, :n]
+
+
+def _qdot_pallas_run(params, x_packed, *, epilogue, scale, block=None):
+    _require_tpu("pallas")
+    return _qdot_pallas(params, x_packed, epilogue=epilogue, scale=scale,
+                        block=block, interpret=False)
+
+
+def _qdot_interpret_run(params, x_packed, *, epilogue, scale, block=None):
+    return _qdot_pallas(params, x_packed, epilogue=epilogue, scale=scale,
+                        block=block, interpret=True)
+
+
+def _qdot_xla_run(params, x_packed, *, epilogue, scale, block=None):
+    del block  # XLA picks its own tiling
+    x = packing.unpack(x_packed, params.a_bits, params.a_signed, axis=-1)
+    return xla_int_gemm(
+        x, params.w_packed, w_bits=params.w_bits, kappa=params.kappa,
+        lam=params.lam, m_mul=params.m, d=params.d,
+        out_bits=params.out_bits, epilogue=epilogue, scale=scale)
+
+
+def _qdot_eager_run(params, x_packed, *, epilogue, scale, block=None):
+    del block
+    from repro.kernels.qmatmul.ref import qmatmul_ref
+
+    if np.ndim(scale) > 0:
+        raise NotImplementedError("eager_ref qdot: scalar scale only")
+    out = qmatmul_ref(
+        np.asarray(x_packed), np.asarray(params.w_packed),
+        np.asarray(params.kappa), np.asarray(params.lam),
+        np.asarray(params.m), a_bits=params.a_bits,
+        a_signed=params.a_signed, w_bits=params.w_bits, d=params.d,
+        out_bits=params.out_bits, epilogue=epilogue, scale=float(scale))
+    dtype = {"int": jnp.int8, "dequant": jnp.bfloat16,
+             "raw": jnp.int32}[epilogue]
+    return jnp.asarray(out).astype(dtype)
+
+
+# ------------------------------------------------------- qconv backends ---
+
+def _conv_fits_vmem(shape, a_bits, w_bits) -> bool:
+    from repro.kernels.common import conv_default_block
+
+    n, h, w, cin, fh, fw, stride, padding, cout = shape
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w + 2 * padding - fw) // stride + 1
+    if ho <= 0 or wo <= 0:
+        return False
+    try:
+        conv_default_block(n, ho, wo, cout, fh, fw,
+                           packing.padded_size(cin), stride, a_bits, w_bits)
+        return True
+    except ValueError:
+        return False
+
+
+def _qconv_fused(params, x_hat, *, epilogue, scale, block, interpret: bool):
+    from repro.kernels.qconv.kernel import qconv2d_fused
+
+    g = params.gemm
+    return qconv2d_fused(
+        x_hat, params.w_packed_fused, g.kappa, g.lam, g.m,
+        fh=params.fh, fw=params.fw, stride=params.stride,
+        padding=params.padding, cin_pad=params.cin_pad, cout=params.cout,
+        a_bits=g.a_bits, a_signed=g.a_signed, w_bits=g.w_bits, d=g.d,
+        out_bits=g.out_bits, epilogue=epilogue, scale=scale, block=block,
+        interpret=interpret)
+
+
+def _qconv_pallas_run(params, x_hat, *, epilogue, scale, block=None):
+    _require_tpu("pallas")
+    return _qconv_fused(params, x_hat, epilogue=epilogue, scale=scale,
+                        block=block, interpret=False)
+
+
+def _qconv_interpret_run(params, x_hat, *, epilogue, scale, block=None):
+    return _qconv_fused(params, x_hat, epilogue=epilogue, scale=scale,
+                        block=block, interpret=True)
+
+
+def _qconv_xla_run(params, x_hat, *, epilogue, scale, block=None):
+    del block
+    from repro.kernels.qconv.ops import im2col_hwc  # lazy: ops imports api
+
+    cols, ho, wo = im2col_hwc(x_hat, params.fh, params.fw, params.stride,
+                              params.padding)
+    y = qdot(params.gemm, cols, epilogue=epilogue, scale=scale,
+             backend="xla")
+    return y.reshape(x_hat.shape[0], ho, wo, params.cout)
+
+
+def _qconv_eager_run(params, x_hat, *, epilogue, scale, block=None):
+    del block
+    from repro.kernels.qconv.ref import qconv2d_ref
+    from repro.kernels.qmatmul.ref import unpack_np
+
+    if epilogue != "int":
+        raise NotImplementedError("eager_ref qconv: 'int' epilogue only")
+    g = params.gemm
+    w_flat = unpack_np(np.asarray(params.w_packed_fused), g.w_bits, True,
+                       axis=0)
+    w_tap = w_flat.reshape(params.fh * params.fw, params.cin_pad,
+                           params.cout)[:, :params.cin, :]
+    w_hat = w_tap.reshape(params.fh, params.fw, params.cin, params.cout)
+    out = qconv2d_ref(np.asarray(x_hat), w_hat, np.asarray(g.kappa),
+                      np.asarray(g.lam), np.asarray(g.m), g.d, g.out_bits,
+                      stride=params.stride, padding=params.padding)
+    return jnp.asarray(out)
+
+
+# --------------------------------------------------------- registrations ---
+
+def _on_tpu(shape, a_bits, w_bits, plat) -> bool:
+    return plat == "tpu"
+
+
+def _always(shape, a_bits, w_bits, plat) -> bool:
+    return True
+
+
+register("qdot", "pallas", supports=_on_tpu, run=_qdot_pallas_run,
+         doc="Mosaic packed sub-byte GEMM kernel (TPU only)")
+register("qdot", "pallas_interpret", supports=_always,
+         run=_qdot_interpret_run,
+         doc="same kernel under the Pallas interpreter (tests/dry-runs)")
+register("qdot", "xla", supports=_always, run=_qdot_xla_run,
+         doc="XLA-native unpack + int dot_general + fused epilogue")
+register("qdot", "eager_ref", supports=_always, run=_qdot_eager_run,
+         doc="independent numpy oracle (bit-exactness baseline)")
+
+register("qconv", "pallas",
+         supports=lambda s, a, w, p: p == "tpu" and _conv_fits_vmem(s, a, w),
+         run=_qconv_pallas_run,
+         doc="fused implicit-GEMM conv kernel (TPU only, VMEM-bounded)")
+register("qconv", "pallas_interpret",
+         supports=lambda s, a, w, p: _conv_fits_vmem(s, a, w),
+         run=_qconv_interpret_run,
+         doc="fused conv kernel under the Pallas interpreter")
+register("qconv", "xla", supports=_always, run=_qconv_xla_run,
+         doc="XLA im2col + xla qdot (also the large-image fallback)")
+register("qconv", "eager_ref", supports=_always, run=_qconv_eager_run,
+         doc="direct-convolution numpy oracle (no shared im2col path)")

@@ -209,5 +209,5 @@ def conv_default_block(n, ho, wo, cout, fh, fw, cin_pad, stride,
         raise ValueError(
             f"fused conv tile (bho=1, bn={LANE}) exceeds the VMEM budget "
             f"for image ho={ho} wo={wo} cin_pad={cin_pad}; use the im2col "
-            f"fallback (use_kernel=False) for images this large")
+            f"fallback (backend='xla') for images this large")
     return bho, bn

@@ -3,3 +3,4 @@ from repro.kernels.qconv.ops import (im2col_hwc, quantize_conv,
 from repro.kernels.qconv.kernel import qconv2d_fused
 from repro.kernels.qconv.ref import qconv2d_ref
 from repro.kernels.common import conv_default_block
+from repro.kernels.api import qconv

@@ -32,7 +32,8 @@ panels instead of re-gathered.
 Sizing: the whole packed image is one VMEM block (IoT-scale images — the
 paper's layers are 16x16/32x32 — fit trivially); `conv_default_block`
 checks the budget and raises for images that would not fit, in which case
-the HBM im2col fallback (`qconv2d_apply(use_kernel=False)`) applies.
+the HBM im2col fallback (the `xla` backend of `repro.kernels.api.qconv`)
+applies.
 """
 from __future__ import annotations
 
@@ -102,7 +103,7 @@ def qconv2d_fused(x_hat, w_packed_fused, kappa, lam, m_mul, *,
                   scale: float = 1.0,
                   block: Optional[tuple] = None,
                   out_dtype=None,
-                  interpret: bool = True):
+                  interpret: bool = False):
     """Fused implicit-GEMM conv on integer images.
 
     x_hat: (N, H, W, Cin) int8 integer images (unpacked). Spatial and

@@ -1,18 +1,21 @@
-"""Quantized HWC convolution (paper §III-C) — fused implicit-GEMM by default.
+"""Quantized HWC convolution (paper §III-C) — backends via the registry.
 
 The conv is the implicit GEMM (N*Ho*Wo, fh*fw*Cin) @ (fh*fw*Cin, Cout).
-`use_kernel=True` (default) runs `repro.kernels.qconv.kernel.qconv2d_fused`:
-the PULP-NN execution model inside one Pallas kernel — receptive fields are
-gathered from the packed HWC image straight into a VMEM scratch buffer (the
-NN-RF/im2col-buffer analogue), then MatMul + BN + QNT/ACT run on the tile
-with no HBM-resident im2col tensor, so the gather loads hide behind the MXU
-the way Mac&Load hides loads behind MACs.
+The `pallas`/`pallas_interpret` backends run
+`repro.kernels.qconv.kernel.qconv2d_fused`: the PULP-NN execution model
+inside one Pallas kernel — receptive fields are gathered from the packed
+HWC image straight into a VMEM scratch buffer (the NN-RF/im2col-buffer
+analogue), then MatMul + BN + QNT/ACT run on the tile with no HBM-resident
+im2col tensor, so the gather loads hide behind the MXU the way Mac&Load
+hides loads behind MACs.
 
-`use_kernel=False` keeps the original explicit route: an XLA im2col
-(`im2col_hwc`) materializes the column tensor, then the pure-jnp packed
-GEMM consumes it. Both routes share the quantization artifact and are
-bit-identical; the fallback also covers images too large for the fused
-kernel's whole-image VMEM block.
+The `xla` backend keeps the original explicit route: an XLA im2col
+(`im2col_hwc`) materializes the column tensor, then the XLA packed GEMM
+consumes it. All backends share the quantization artifact and are
+bit-identical; `xla` also covers images too large for the fused kernel's
+whole-image VMEM block. `qconv2d_apply` below is a thin compat wrapper
+over `repro.kernels.api.qconv` (the deprecated ``use_kernel``/
+``interpret`` booleans map onto named backends).
 
 Weights are packed twice at quantization time (a few KB each at IoT scale):
 the flat im2col layout (K = fh*fw*cin padded once at the tail) for the
@@ -32,7 +35,6 @@ import numpy as np
 from repro.core import packing
 from repro.core.quantize import (QuantSpec, QuantizedLinearParams,
                                  fold_bn_requant, quantize)
-from repro.kernels.qmatmul import qlinear_apply
 
 
 def im2col_hwc(x, fh: int, fw: int, stride: int = 1, padding: int = 0):
@@ -102,25 +104,19 @@ def quantize_conv(w, spec_w: QuantSpec, bn_scale, bn_bias,
 
 
 def qconv2d_apply(params: QuantizedConvParams, x_hat, *,
-                  use_kernel: bool = True, interpret: bool = True,
-                  block: Optional[tuple] = None):
+                  backend: Optional[str] = None,
+                  block: Optional[tuple] = None,
+                  use_kernel: Optional[bool] = None,
+                  interpret: Optional[bool] = None):
     """x_hat: (N, H, W, Cin) int8 integer images -> (N, Ho, Wo, Cout) int8.
 
-    use_kernel=True: fused implicit-GEMM Pallas kernel (block = (bho, bn)
-    conv tile override). use_kernel=False: XLA im2col + pure-jnp packed
-    GEMM fallback.
+    Thin compat wrapper over `repro.kernels.api.qconv`; prefer calling
+    that directly. ``backend`` selects a registered conv backend (block =
+    (bho, bn) conv tile override for the fused kernel); ``use_kernel``/
+    ``interpret`` are deprecated aliases mapped by
+    `api.resolve_legacy_backend`.
     """
-    if use_kernel:
-        from repro.kernels.qconv.kernel import qconv2d_fused
-        g = params.gemm
-        return qconv2d_fused(
-            x_hat, params.w_packed_fused, g.kappa, g.lam, g.m,
-            fh=params.fh, fw=params.fw, stride=params.stride,
-            padding=params.padding, cin_pad=params.cin_pad,
-            cout=params.cout, a_bits=g.a_bits, a_signed=g.a_signed,
-            w_bits=g.w_bits, d=g.d, out_bits=g.out_bits,
-            block=block, interpret=interpret)
-    cols, ho, wo = im2col_hwc(x_hat, params.fh, params.fw, params.stride,
-                              params.padding)
-    y = qlinear_apply(params.gemm, cols, use_kernel=False)
-    return y.reshape(x_hat.shape[0], ho, wo, params.cout)
+    from repro.kernels import api
+
+    backend = api.resolve_legacy_backend(backend, use_kernel, interpret)
+    return api.qconv(params, x_hat, backend=backend, block=block)

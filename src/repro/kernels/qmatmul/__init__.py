@@ -2,3 +2,4 @@ from repro.kernels.qmatmul.ops import (qlinear_apply, qlinear_apply_packed,
                                        qmatmul_jnp)
 from repro.kernels.qmatmul.kernel import qmatmul_packed, default_block
 from repro.kernels.qmatmul.ref import qmatmul_ref, unpack_np
+from repro.kernels.api import qdot, qdot_packed

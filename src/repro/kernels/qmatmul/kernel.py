@@ -68,13 +68,17 @@ def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
                    scale: float = 1.0,
                    block: Optional[tuple] = None,
                    out_dtype=None,
-                   interpret: bool = True):
+                   interpret: bool = False):
     """Packed GEMM: x (M, K/pf_a) @ w (K/pf_w, N) with fused epilogue.
 
     K is the padded logical contraction dim (multiple of CHUNK); both
     operands are chunk-planar packed along K (bits==8 means unpacked).
     kappa/lam/m_mul are (N,) int32 epilogue params (ignored unless
     epilogue=='int').
+
+    ``interpret`` defaults to False (real Mosaic lowering); interpreter
+    runs go through the explicit ``pallas_interpret`` backend of
+    `repro.kernels.api` (tests pass interpret=True directly).
     """
     mdim = x.shape[0]
     pf_a, pf_w = packing.pack_factor(a_bits), packing.pack_factor(w_bits)

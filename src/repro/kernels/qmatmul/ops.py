@@ -1,106 +1,60 @@
-"""jit'd public wrapper around the packed sub-byte GEMM kernel.
+"""Compat wrappers around the unified quantized-op API (`repro.kernels.api`).
 
-Handles leading-batch flattening, K padding to packing.CHUNK, M/N padding to
-block multiples, activation quantize+pack on the way in, and exposes the
-three epilogues. `use_kernel=False` falls back to a pure-jnp path with
-identical integer semantics (used on the 512-device dry-run meshes where the
-interpret-mode kernel would be prohibitively slow to trace per device, and
-as the XLA-native production path: the packed GEMM then lowers to XLA
-convert+dot which the TPU compiler fuses).
+`qlinear_apply`/`qlinear_apply_packed` are thin shims over `api.qdot` /
+`api.qdot_packed`: backend selection, block lookup, padding, and packing
+all live in the registry layer now. The deprecated ``use_kernel`` /
+``interpret`` booleans map onto named backends (True -> 'pallas_interpret'
+— the old default silently ran interpret mode; True + interpret=False ->
+'pallas'; False -> 'xla') with a DeprecationWarning.
+
+`qmatmul_jnp` keeps its raw-argument signature (tests/benchmarks build
+operands directly) but is now a wrapper over the one shared XLA int-GEMM
+implementation (`api.xla_int_gemm`) — the same code path the nn dense int
+mode runs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import packing
-from repro.core.quantize import (QuantizedLinearParams, batchnorm_int,
-                                 qnt_act, requantize_shift)
-from repro.kernels.qmatmul.kernel import qmatmul_packed
-
-
-def _flatten_lead(x):
-    lead = x.shape[:-1]
-    return x.reshape(-1, x.shape[-1]), lead
-
-
-def _pad_axis(x, mult, axis):
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+from repro.core.quantize import QuantizedLinearParams
+from repro.kernels import api
 
 
 def qmatmul_jnp(x_packed, w_packed, kappa, lam, m_mul, *,
                 a_bits, a_signed, w_bits, d, out_bits,
                 epilogue="int", scale=1.0):
-    """Pure-jnp path, bit-identical to the kernel (shares requant helper)."""
+    """Pure-XLA path, bit-identical to the kernel (shared requant helper)."""
     x = packing.unpack(x_packed, a_bits, a_signed, axis=-1)
-    w = packing.unpack(w_packed, w_bits, True, axis=0)
-    acc = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32)
-    if epilogue == "raw":
-        return acc
-    if epilogue == "dequant":
-        return (acc.astype(jnp.float32) * scale).astype(jnp.bfloat16)
-    phi_p = batchnorm_int(acc, kappa, lam)
-    return qnt_act(phi_p, m_mul, d, out_bits)
+    return api.xla_int_gemm(x, w_packed, w_bits=w_bits, kappa=kappa,
+                            lam=lam, m_mul=m_mul, d=d, out_bits=out_bits,
+                            epilogue=epilogue, scale=scale)
 
 
 def qlinear_apply(params: QuantizedLinearParams, x_hat, *,
                   epilogue: str = "int", scale: float = 1.0,
-                  use_kernel: bool = True, block: Optional[tuple] = None,
-                  interpret: bool = True):
+                  backend: Optional[str] = None,
+                  block: Optional[tuple] = None,
+                  use_kernel: Optional[bool] = None,
+                  interpret: Optional[bool] = None):
     """Apply a quantized linear layer to integer-image activations.
 
-    x_hat: (..., K_logical) int8 integer images (unpacked). They are padded
-    to CHUNK and packed on the fly when a_bits < 8 (in a fused chain the
-    previous layer's epilogue already emits packed activations and
-    `qlinear_apply_packed` skips this step).
+    Thin compat wrapper over `repro.kernels.api.qdot`; prefer calling that
+    directly. ``use_kernel``/``interpret`` are deprecated aliases.
     """
-    x2, lead = _flatten_lead(x_hat)
-    x2 = packing.pad_to_chunk(x2, axis=-1)
-    xp = packing.pack(x2, params.a_bits, axis=-1)
-    out = qlinear_apply_packed(
-        params, xp, epilogue=epilogue, scale=scale, use_kernel=use_kernel,
-        block=block, interpret=interpret)
-    return out.reshape(*lead, out.shape[-1])
+    backend = api.resolve_legacy_backend(backend, use_kernel, interpret)
+    return api.qdot(params, x_hat, epilogue=epilogue, scale=scale,
+                    backend=backend, block=block)
 
 
 def qlinear_apply_packed(params: QuantizedLinearParams, x_packed, *,
                          epilogue: str = "int", scale: float = 1.0,
-                         use_kernel: bool = True,
+                         backend: Optional[str] = None,
                          block: Optional[tuple] = None,
-                         interpret: bool = True):
-    kw = dict(a_bits=params.a_bits, a_signed=params.a_signed,
-              w_bits=params.w_bits, d=params.d, out_bits=params.out_bits,
-              epilogue=epilogue, scale=scale)
-    if not use_kernel:
-        return qmatmul_jnp(x_packed, params.w_packed, params.kappa,
-                           params.lam, params.m, **kw)
-    # pad M to the block multiple the kernel picks
-    m = x_packed.shape[0]
-    pf_a = packing.pack_factor(params.a_bits)
-    k = x_packed.shape[1] * pf_a
-    n = params.w_packed.shape[1]
-    from repro.kernels.qmatmul.kernel import default_block
-    bm, bn, bk = block or default_block(m, n, k, params.a_bits, params.w_bits)
-    bm = min(bm, _round_up(m, 32))
-    xp = _pad_axis(x_packed, bm, 0)
-    wp = _pad_axis(params.w_packed, bn, 1)
-    kappa = _pad_axis(params.kappa, bn, 0)
-    lam = _pad_axis(params.lam, bn, 0)
-    mm = _pad_axis(params.m, bn, 0)
-    out = qmatmul_packed(xp, wp, kappa, lam, mm, block=(bm, bn, bk),
-                         interpret=interpret, **kw)
-    return out[:m, :n]
-
-
-def _round_up(x, mult):
-    return x + (-x) % mult
+                         use_kernel: Optional[bool] = None,
+                         interpret: Optional[bool] = None):
+    """`qlinear_apply` over already-packed activations (compat wrapper over
+    `repro.kernels.api.qdot_packed`)."""
+    backend = api.resolve_legacy_backend(backend, use_kernel, interpret)
+    return api.qdot_packed(params, x_packed, epilogue=epilogue, scale=scale,
+                           backend=backend, block=block)

@@ -1,0 +1,237 @@
+"""Per-(shape, bits, backend) block-shape autotune cache.
+
+The block selectors in `kernels/common.py` (`default_block`,
+`conv_default_block`) pick safe VMEM-bounded tiles analytically. This
+module layers a measured cache on top: `repro.kernels.api` consults
+`get_block(op, shape, a_bits, w_bits, backend)` before falling back to the
+analytic default, so a shape that has been autotuned once keeps its best
+tile across runs via a small JSON artifact.
+
+Cache key: ``op|MxKxN|a{a_bits}w{w_bits}|backend`` (conv keys use the full
+geometry tuple). The JSON artifact is versioned and round-trips through
+`save`/`load`; set ``REPRO_QTUNE_CACHE=/path/to/cache.json`` to preload it
+at import-free first use. CI uploads the artifact so the tuned tiles ride
+along with the perf trajectory.
+
+CLI (used by the CI parity matrix to produce the artifact):
+
+    PYTHONPATH=src python -m repro.kernels.tune \
+        --shapes 64x256x256,64x512x128 --bits 8x8,4x4 \
+        --backend pallas_interpret --out tune_cache.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+CACHE_VERSION = 1
+CACHE_ENV = "REPRO_QTUNE_CACHE"
+
+
+def _key(op: str, shape: Sequence[int], a_bits: int, w_bits: int,
+         backend: str) -> str:
+    return (f"{op}|{'x'.join(str(int(s)) for s in shape)}"
+            f"|a{a_bits}w{w_bits}|{backend}")
+
+
+class TuneCache:
+    """In-memory block cache with a versioned JSON round-trip."""
+
+    def __init__(self):
+        self.blocks: Dict[str, Tuple[int, ...]] = {}
+
+    def get(self, op, shape, a_bits, w_bits, backend):
+        blk = self.blocks.get(_key(op, shape, a_bits, w_bits, backend))
+        return None if blk is None else tuple(blk)
+
+    def put(self, op, shape, a_bits, w_bits, backend, block):
+        self.blocks[_key(op, shape, a_bits, w_bits, backend)] = tuple(
+            int(b) for b in block)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": CACHE_VERSION,
+            "blocks": {k: list(v) for k, v in sorted(self.blocks.items())},
+        }, indent=2, sort_keys=True)
+
+    @staticmethod
+    def from_json(text: str) -> "TuneCache":
+        d = json.loads(text)
+        if d.get("version") != CACHE_VERSION:
+            raise ValueError(
+                f"unsupported tune-cache version {d.get('version')}")
+        c = TuneCache()
+        c.blocks = {k: tuple(int(b) for b in v)
+                    for k, v in d.get("blocks", {}).items()}
+        return c
+
+
+# module-level cache; REPRO_QTUNE_CACHE preloads it lazily on first lookup
+_CACHE = TuneCache()
+_ENV_LOADED = False
+
+
+def _maybe_load_env():
+    global _ENV_LOADED
+    if _ENV_LOADED:
+        return
+    _ENV_LOADED = True
+    path = os.environ.get(CACHE_ENV)
+    if not path:
+        return
+    if pathlib.Path(path).exists():
+        merge(load(path))
+    else:
+        import warnings
+        warnings.warn(
+            f"{CACHE_ENV}={path} does not exist; no tuned blocks loaded "
+            "(every lookup falls back to the analytic block selectors)",
+            RuntimeWarning, stacklevel=2)
+
+
+def get_block(op: str, shape, a_bits: int, w_bits: int,
+              backend: str) -> Optional[Tuple[int, ...]]:
+    """Cached block for this exact (op, shape, bits, backend), or None —
+    callers fall back to the analytic selector on a miss."""
+    _maybe_load_env()
+    return _CACHE.get(op, shape, a_bits, w_bits, backend)
+
+
+def record_block(op: str, shape, a_bits: int, w_bits: int, backend: str,
+                 block) -> None:
+    _CACHE.put(op, shape, a_bits, w_bits, backend, block)
+
+
+def clear() -> None:
+    _CACHE.blocks.clear()
+
+
+def save(path) -> None:
+    pathlib.Path(path).write_text(_CACHE.to_json())
+
+
+def load(path) -> TuneCache:
+    return TuneCache.from_json(pathlib.Path(path).read_text())
+
+
+def merge(other: TuneCache) -> None:
+    _CACHE.blocks.update(other.blocks)
+
+
+def entries() -> Dict[str, Tuple[int, ...]]:
+    return dict(_CACHE.blocks)
+
+
+# ---------------------------------------------------------------- tuning ---
+
+def _time(fn, iters=2):
+    import jax
+    jax.block_until_ready(fn())          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def qdot_candidates(m: int, n: int, k: int, a_bits: int,
+                    w_bits: int) -> Tuple[Tuple[int, int, int], ...]:
+    """Small candidate ladder around the analytic default (the paper's
+    4x2 -> 4x4 register-tiling exploration, per shape)."""
+    from repro.core import packing
+    from repro.kernels.common import LANE, SUBLANE_I8, default_block
+
+    bm0, bn0, bk0 = default_block(m, n, k, a_bits, w_bits)
+    cands = {(bm0, bn0, bk0)}
+    for bm in {bm0, max(SUBLANE_I8, bm0 // 2), bm0 * 2}:
+        for bn in {bn0, max(LANE, bn0 // 2)}:
+            for bk in {bk0, max(packing.CHUNK, bk0 // 2)}:
+                if m % bm == 0 or bm <= m:
+                    cands.add((bm, bn, bk))
+    # keep only tiles that divide the padded problem cleanly enough for the
+    # wrapper (bk must divide K; bm/bn are padded to by the wrapper)
+    return tuple(sorted(c for c in cands if k % c[2] == 0))
+
+
+def autotune_qdot(params, x_packed, *, backend: str = "pallas_interpret",
+                  epilogue: str = "int", iters: int = 2,
+                  candidates=None) -> Tuple[int, int, int]:
+    """Time candidate GEMM blocks for one packed-shape and record the best.
+
+    Returns the winning (bm, bn, bk); the result also lands in the module
+    cache so subsequent `api.qdot` calls at this shape pick it up.
+    """
+    from repro.core import packing
+    from repro.kernels import api
+
+    m = x_packed.shape[0]
+    k = x_packed.shape[1] * packing.pack_factor(params.a_bits)
+    n = params.w_packed.shape[1]
+    shape = (m, k, n)
+    cands = tuple(candidates or qdot_candidates(m, n, k, params.a_bits,
+                                                params.w_bits))
+    spec = api.get("qdot", backend)
+    best, best_t = None, float("inf")
+    for blk in cands:
+        try:
+            t = _time(lambda b=blk: spec.run(
+                params, x_packed, epilogue=epilogue, scale=1.0, block=b),
+                iters=iters)
+        except Exception:
+            continue                      # candidate not runnable; skip
+        if t < best_t:
+            best, best_t = blk, t
+    if best is None:
+        raise RuntimeError(f"no runnable block candidate for {shape}")
+    record_block("qdot", shape, params.a_bits, params.w_bits, backend, best)
+    return best
+
+
+def main():
+    import argparse
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import packing
+    from repro.core.quantize import QuantizedLinearParams
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shapes", default="64x256x256",
+                    help="comma-separated MxKxN GEMM shapes")
+    ap.add_argument("--bits", default="8x8,4x4,2x2",
+                    help="comma-separated AxW bit pairs")
+    ap.add_argument("--backend", default="pallas_interpret")
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--out", default="tune_cache.json")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    for sh in args.shapes.split(","):
+        m, k, n = (int(v) for v in sh.split("x"))
+        for pair in args.bits.split(","):
+            ab, wb = (int(v) for v in pair.split("x"))
+            lo, hi = packing.int_range(ab, False)
+            xp = packing.pack(jnp.asarray(rng.integers(
+                lo, hi + 1, size=(m, k)).astype(np.int8)), ab, axis=-1)
+            lo, hi = packing.int_range(wb, True)
+            wp = packing.pack(jnp.asarray(rng.integers(
+                lo, hi + 1, size=(k, n)).astype(np.int8)), wb, axis=0)
+            params = QuantizedLinearParams(
+                w_packed=wp, w_bits=wb, a_bits=ab, a_signed=False,
+                kappa=jnp.ones((n,), jnp.int32),
+                lam=jnp.zeros((n,), jnp.int32),
+                m=jnp.full((n,), 1 << 14, jnp.int32), d=20, out_bits=8,
+                k_logical=k)
+            blk = autotune_qdot(params, xp, backend=args.backend,
+                                iters=args.iters)
+            print(f"qdot {m}x{k}x{n} A{ab}W{wb} [{args.backend}] -> {blk}")
+    save(args.out)
+    print(f"tune cache ({len(entries())} entries) -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -95,6 +95,11 @@ def main():
         max_new_tokens=args.max_new) for _ in range(args.requests)]
     eng = Engine(model, params, batch_size=args.batch, max_len=args.max_len,
                  plan=plan)
+    if mode != "off":
+        from repro.kernels.api import ENV_VAR
+        kb = eng.kernel_backends()
+        print(f"kernel backends: qdot={kb['qdot']} qconv={kb['qconv']} "
+              f"(override: {ENV_VAR} or QuantConfig.backend)")
     t0 = time.time()
     out = eng.generate(reqs)
     dt = time.time() - t0

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -28,11 +29,32 @@ class QuantConfig:
     # static activation scale (absmax) used in int mode; per-tensor dynamic
     # quantization when None (max computed on the fly; costs a reduction)
     a_absmax: Optional[float] = 4.0
-    # Pallas kernel (interpret) vs XLA-native path. Honored by the kernel
-    # op wrappers (kernels/qmatmul, kernels/qconv); dense_apply's int path
-    # is always XLA-native (the production lowering) — the flag is carried
-    # through deployment plans for call sites that do route kernels.
-    use_kernel: bool = False
+    # named kernel backend for the quantized-op registry
+    # (repro.kernels.api: pallas | pallas_interpret | xla | eager_ref);
+    # None -> capability-ordered default resolution. Honored by the op
+    # entry points (api.qdot / api.qconv); dense_apply's int path runs the
+    # shared `xla` implementation (the production lowering) — the field is
+    # carried through deployment plans for call sites that route kernels.
+    backend: Optional[str] = None
+    # DEPRECATION SHIM: pre-registry boolean. Normalized to None in
+    # __post_init__ after mapping True -> 'pallas_interpret' (the old
+    # default silently ran interpret mode), False -> 'xla'.
+    use_kernel: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.use_kernel is not None:
+            if self.backend is not None:
+                raise ValueError(
+                    "pass either backend= or the deprecated use_kernel=, "
+                    "not both")
+            warnings.warn(
+                "QuantConfig(use_kernel=...) is deprecated; pass "
+                "backend='pallas'|'pallas_interpret'|'xla'|'eager_ref' "
+                "(see repro.kernels.api)", DeprecationWarning, stacklevel=3)
+            object.__setattr__(
+                self, "backend",
+                "pallas_interpret" if self.use_kernel else "xla")
+            object.__setattr__(self, "use_kernel", None)
 
     @property
     def enabled(self):
@@ -99,27 +121,28 @@ def dense_apply(p, x, *, qcfg: QuantConfig = QOFF, precision=None):
 
 
 def _int_matmul(p, x, qcfg: QuantConfig):
-    """W{8,4,2}A{8,4,2} integer GEMM with dequant epilogue (XLA-native).
+    """W{8,4,2}A{8,4,2} integer GEMM with dequant epilogue.
 
-    Packed weights are unpacked to int8 next to the MXU; activations are
-    symmetrically quantized onto the a_bits grid (int8 containers, so A8
-    caps at ±127) with a static scale. HBM traffic for weights is 1/pf of
-    the bf16 baseline — the paper's sub-byte gain mapped to the TPU memory
-    roofline term.
+    Activations are symmetrically quantized onto the a_bits grid (int8
+    containers, so A8 caps at ±127) with a static scale; the GEMM +
+    per-channel dequant epilogue is the shared `xla` implementation of the
+    quantized-op registry (`repro.kernels.api.xla_int_gemm`) — the same
+    code path the `xla` qdot backend runs, so dense serving and the packed
+    kernel wrappers no longer maintain divergent copies. HBM traffic for
+    weights is 1/pf of the bf16 baseline — the paper's sub-byte gain
+    mapped to the TPU memory roofline term.
     """
-    d_in = x.shape[-1]
+    from repro.kernels.api import xla_int_gemm
+
     absmax = qcfg.a_absmax or 4.0
     a_max = packing.int_range(qcfg.a_bits, True)[1]  # A8 caps at 127 (int8)
     a_scale = absmax / a_max
     x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / a_scale), -a_max, a_max
                    ).astype(jnp.int8)
     x_q = packing.pad_to_chunk(x_q, axis=-1)
-    w_int = packing.unpack(p["w_packed"], qcfg.w_bits, True, axis=0)
-    acc = jax.lax.dot_general(
-        x_q, w_int, (((x_q.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
     scale = (p["w_scale"] * a_scale).astype(jnp.float32)
-    return (acc.astype(jnp.float32) * scale).astype(x.dtype)
+    return xla_int_gemm(x_q, p["w_packed"], w_bits=qcfg.w_bits,
+                        epilogue="dequant", scale=scale, out_dtype=x.dtype)
 
 
 def quantize_dense_weights(w, w_bits: int):

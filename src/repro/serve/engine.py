@@ -42,6 +42,13 @@ class Engine:
         from repro.nn.module import param_bytes
         return param_bytes(self.params)
 
+    def kernel_backends(self) -> dict:
+        """Resolved default backend per quantized op (repro.kernels.api) —
+        what this process routes int-mode denses/convs through unless a
+        plan rule or REPRO_QBACKEND overrides it. For ops dashboards."""
+        from repro.kernels import api
+        return {op: api.default_backend(op) for op in api.OPS}
+
     def _prefill_scored(self, prompts):
         """Prefill via teacher-forced forward, then replay tokens into the
         decode cache (keeps one code path for cache layout)."""

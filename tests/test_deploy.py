@@ -57,7 +57,7 @@ def test_policy_resolution_first_match_wins():
 def test_plan_json_roundtrip(tmp_path):
     plan = PrecisionPlan(
         rules=(PlanRule("layers/mlp/*", 4, a_bits=8, a_absmax=2.5),
-               PlanRule("layers/attn/*", 2, use_kernel=True)),
+               PlanRule("layers/attn/*", 2, backend="pallas_interpret")),
         default_w_bits=8, meta={"arch": "qwen-smoke", "budget": 0.5})
     f = tmp_path / "plan.json"
     save_plan(plan, f)

@@ -35,8 +35,8 @@ def test_conv_vs_direct_oracle(bits, hw, rng):
     want = qconv2d_ref(np.asarray(xq), w_unp.reshape(F, F, Cin, Cout),
                        np.asarray(qp.gemm.kappa), np.asarray(qp.gemm.lam),
                        np.asarray(qp.gemm.m), qp.gemm.d, bits, 1, 1)
-    got_k = qconv2d_apply(qp, xq, use_kernel=True)
-    got_j = qconv2d_apply(qp, xq, use_kernel=False)
+    got_k = qconv2d_apply(qp, xq, backend="pallas_interpret")
+    got_j = qconv2d_apply(qp, xq, backend="xla")
     assert np.array_equal(np.asarray(got_k), want)
     assert np.array_equal(np.asarray(got_j), want)
 
@@ -57,6 +57,6 @@ def test_conv_stride2(rng):
     want = qconv2d_ref(np.asarray(xq), w_unp.reshape(F, F, Cin, Cout),
                        np.asarray(qp.gemm.kappa), np.asarray(qp.gemm.lam),
                        np.asarray(qp.gemm.m), qp.gemm.d, 4, 2, 1)
-    got = qconv2d_apply(qp, xq, use_kernel=False)
+    got = qconv2d_apply(qp, xq, backend="xla")
     assert np.array_equal(np.asarray(got), want)
     assert got.shape == (1, 4, 4, Cout)

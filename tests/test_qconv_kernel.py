@@ -60,7 +60,7 @@ def test_fused_bit_exact_grid(a_bits, w_bits, rng):
     for stride, padding in [(1, 0), (1, 1), (2, 0), (2, 1)]:
         qp = dataclasses.replace(qp0, stride=stride, padding=padding)
         want = _oracle(qp, xq, a_bits)
-        got = qconv2d_apply(qp, xq, use_kernel=True)
+        got = qconv2d_apply(qp, xq, backend="pallas_interpret")
         assert got.dtype == jnp.int8
         assert np.array_equal(np.asarray(got), want), (
             f"fused conv mismatch a={a_bits} w={w_bits} "
@@ -73,8 +73,8 @@ def test_fused_matches_im2col_fallback(bits, rng):
     qp, xq = _quantized_layer(rng, (9, 6), cin=24, cout=33, f=3,
                               a_bits=bits, w_bits=bits, out_bits=bits,
                               stride=1, padding=1, n=2)
-    got_fused = qconv2d_apply(qp, xq, use_kernel=True)
-    got_jnp = qconv2d_apply(qp, xq, use_kernel=False)
+    got_fused = qconv2d_apply(qp, xq, backend="pallas_interpret")
+    got_jnp = qconv2d_apply(qp, xq, backend="xla")
     assert np.array_equal(np.asarray(got_fused), np.asarray(got_jnp))
 
 
@@ -85,7 +85,7 @@ def test_fused_ragged_ho_tiles(rng):
                               a_bits=4, w_bits=4, out_bits=4,
                               stride=1, padding=1)
     want = _oracle(qp, xq, 4)
-    got = qconv2d_apply(qp, xq, use_kernel=True, block=(5, 128))  # ho=12
+    got = qconv2d_apply(qp, xq, backend="pallas_interpret", block=(5, 128))  # ho=12
     assert np.array_equal(np.asarray(got), want)
 
 
@@ -96,7 +96,7 @@ def test_fused_cin_chunk_multiple(rng):
                               stride=1, padding=1, n=1)
     assert qp.cin_pad == packing.CHUNK
     want = _oracle(qp, xq, 4)
-    got = qconv2d_apply(qp, xq, use_kernel=True)
+    got = qconv2d_apply(qp, xq, backend="pallas_interpret")
     assert np.array_equal(np.asarray(got), want)
 
 
@@ -107,7 +107,7 @@ def test_fused_multiple_cout_panels(rng):
                               a_bits=4, w_bits=4, out_bits=4,
                               stride=1, padding=1, n=2)
     want = _oracle(qp, xq, 4)
-    got = qconv2d_apply(qp, xq, use_kernel=True, block=(3, 128))
+    got = qconv2d_apply(qp, xq, backend="pallas_interpret", block=(3, 128))
     assert np.array_equal(np.asarray(got), want)
 
 
@@ -118,7 +118,7 @@ def test_fused_1x1_conv(rng):
                               a_bits=4, w_bits=2, out_bits=4,
                               stride=1, padding=0, n=1)
     want = _oracle(qp, xq, 4)
-    got = qconv2d_apply(qp, xq, use_kernel=True)
+    got = qconv2d_apply(qp, xq, backend="pallas_interpret")
     assert np.array_equal(np.asarray(got), want)
 
 
@@ -127,7 +127,7 @@ def test_fused_non_square_filter(rng):
                               a_bits=4, w_bits=4, out_bits=4,
                               stride=1, padding=0, n=1)
     want = _oracle(qp, xq, 4)
-    got = qconv2d_apply(qp, xq, use_kernel=True)
+    got = qconv2d_apply(qp, xq, backend="pallas_interpret")
     assert np.array_equal(np.asarray(got), want)
 
 
@@ -138,7 +138,7 @@ def test_fused_stride2_even_dims(rng):
                               a_bits=2, w_bits=4, out_bits=4,
                               stride=2, padding=1, n=1)
     want = _oracle(qp, xq, 4)
-    got = qconv2d_apply(qp, xq, use_kernel=True)
+    got = qconv2d_apply(qp, xq, backend="pallas_interpret")
     assert np.array_equal(np.asarray(got), want)
 
 
@@ -154,7 +154,7 @@ def test_fused_raw_epilogue_matches_int32_accum(rng):
         fh=qp.fh, fw=qp.fw, stride=qp.stride, padding=qp.padding,
         cin_pad=qp.cin_pad, cout=qp.cout, a_bits=g.a_bits,
         a_signed=g.a_signed, w_bits=g.w_bits, d=g.d, out_bits=g.out_bits,
-        epilogue="raw")
+        epilogue="raw", interpret=True)
     w_unp = np.asarray(packing.unpack(
         g.w_packed, g.w_bits, True, axis=0))[: qp.fh * qp.fw * qp.cin]
     w_unp = w_unp.reshape(qp.fh, qp.fw, qp.cin, qp.cout).astype(np.int32)

@@ -124,7 +124,7 @@ def test_qlinear_apply_odd_shapes(rng):
     sy = calibrate_activation(y_f, 4, 100.0)
     qp = quantize_linear(jnp.asarray(w), sw, bn_s, bn_b, sx, sy)
     xq = quantize(jnp.asarray(x), sx)
-    yk = qlinear_apply(qp, xq, use_kernel=True)
-    yj = qlinear_apply(qp, xq, use_kernel=False)
+    yk = qlinear_apply(qp, xq, backend="pallas_interpret")
+    yj = qlinear_apply(qp, xq, backend="xla")
     assert np.array_equal(np.asarray(yk), np.asarray(yj))
     assert yk.shape == (M, N)

@@ -37,15 +37,15 @@ def test_paper_pipeline_two_layer_integer_chain(rng=None):
                        np.full((C3,), 0.2, np.float32),
                        np.zeros((C3,), np.float32), s1, s2)
     xq = quantize(jnp.asarray(x), sx)
-    for use_kernel in (False, True):
-        y1 = qconv2d_apply(q1, xq, use_kernel=use_kernel)
-        y2 = qconv2d_apply(q2, y1, use_kernel=use_kernel)
+    for backend in ("xla", "pallas_interpret"):
+        y1 = qconv2d_apply(q1, xq, backend=backend)
+        y2 = qconv2d_apply(q2, y1, backend=backend)
         assert y2.shape == (N, H, W, C3)
         assert int(jnp.min(y2)) >= 0 and int(jnp.max(y2)) <= 15
-        if use_kernel:
-            np.testing.assert_array_equal(np.asarray(y2), ref)
-        else:
+        if backend == "xla":
             ref = np.asarray(y2)
+        else:
+            np.testing.assert_array_equal(np.asarray(y2), ref)
 
 
 @pytest.mark.slow
