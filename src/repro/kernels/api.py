@@ -27,6 +27,19 @@ Resolution order for the per-call backend: explicit ``backend=`` argument
 (``pallas`` where supported, i.e. on TPU, else ``xla``). Block shapes come
 from the per-(shape, bits, backend) autotune cache (`repro.kernels.tune`),
 falling back to the analytic `default_block`/`conv_default_block`.
+
+**Cluster-parallel path (paper fig. 9).** Passing ``mesh=`` to
+`qdot`/`qconv` (or calling `qdot_sharded`/`qconv_sharded` directly) runs
+the op under `shard_map` on an N-device mesh — the JAX analog of the
+paper's N-core PULP cluster. Packed weights are tensor-parallel over the
+output-feature axis (each device owns a disjoint Cout slice, like a
+cluster core writing its own output-channel group into TCDM), activations
+are data-parallel over the batch axis. Because K stays unsharded, each
+shard's int32 accumulation is complete and the eq. 3/4 epilogue (all
+per-output-channel parameters) runs locally — the sharded path needs **no
+psum** and is bit-exact vs the single-device backends. The inner backend
+is resolved per *local shard shape* by the same registry rules;
+``eager_ref`` is host-side numpy and is rejected under `shard_map`.
 """
 from __future__ import annotations
 
@@ -214,13 +227,20 @@ def _merge_hints(backend, block, plan_hints):
 
 def qdot(params, x_hat, *, epilogue: str = "int", scale=1.0,
          backend: Optional[str] = None, block: Optional[tuple] = None,
-         plan_hints: Optional[dict] = None):
+         plan_hints: Optional[dict] = None, mesh=None,
+         dp_axis: str = "data", tp_axis: str = "model"):
     """Quantized dot: integer-image activations x packed weights.
 
     params: `QuantizedLinearParams`. x_hat: (..., K_logical) int8 integer
     images (unpacked); padded to CHUNK and packed on the fly. Leading dims
-    are flattened for the GEMM and restored on the output.
+    are flattened for the GEMM and restored on the output. With ``mesh=``
+    the call routes through `qdot_sharded` (cluster-parallel execution).
     """
+    if mesh is not None:
+        return qdot_sharded(params, x_hat, mesh=mesh, dp_axis=dp_axis,
+                            tp_axis=tp_axis, epilogue=epilogue, scale=scale,
+                            backend=backend, block=block,
+                            plan_hints=plan_hints)
     x2, lead = _flatten_lead(x_hat)
     x2 = packing.pad_to_chunk(x2, axis=-1)
     xp = packing.pack(x2, params.a_bits, axis=-1)
@@ -258,12 +278,19 @@ def _conv_shape(params, x_hat):
 
 def qconv(params, x_hat, *, epilogue: str = "int", scale=1.0,
           backend: Optional[str] = None, block: Optional[tuple] = None,
-          plan_hints: Optional[dict] = None):
+          plan_hints: Optional[dict] = None, mesh=None,
+          dp_axis: str = "data", tp_axis: str = "model"):
     """Quantized HWC conv: (N, H, W, Cin) int8 images -> (N, Ho, Wo, Cout).
 
     params: `QuantizedConvParams` (both weight layouts built by
     `quantize_conv`, so every backend consumes bit-identical integers).
+    With ``mesh=`` the call routes through `qconv_sharded`.
     """
+    if mesh is not None:
+        return qconv_sharded(params, x_hat, mesh=mesh, dp_axis=dp_axis,
+                             tp_axis=tp_axis, epilogue=epilogue, scale=scale,
+                             backend=backend, block=block,
+                             plan_hints=plan_hints)
     backend, block = _merge_hints(backend, block, plan_hints)
     shape = _conv_shape(params, x_hat)
     g = params.gemm
@@ -272,6 +299,134 @@ def qconv(params, x_hat, *, epilogue: str = "int", scale=1.0,
         block = tune.get_block("qconv", shape, g.a_bits, g.w_bits, spec.name)
     return spec.run(params, x_hat, epilogue=epilogue, scale=scale,
                     block=block)
+
+
+# ------------------------------------------------ cluster-parallel path ---
+
+def _cluster_prologue(mesh, dp_axis, tp_axis):
+    """(dp, tp, dp_spec_entry, tp_spec_entry) for a cluster call; absent
+    axes act as size-1 / replicated so pure-DP and pure-TP meshes work."""
+    from repro.parallel import sharding as shrules
+
+    dp = shrules.cluster_axis_size(mesh, dp_axis)
+    tp = shrules.cluster_axis_size(mesh, tp_axis)
+    return dp, tp, shrules.axis_entry(mesh, dp_axis), \
+        shrules.axis_entry(mesh, tp_axis)
+
+
+def _reject_host_backend(spec):
+    if spec.name == "eager_ref":
+        raise ValueError(
+            "backend 'eager_ref' is a host-side numpy oracle and cannot "
+            "run under shard_map; run it on one device and compare against "
+            "the sharded result instead (tests/test_cluster.py does)")
+    return spec
+
+
+def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
+                 tp_axis: str = "model", epilogue: str = "int", scale=1.0,
+                 backend: Optional[str] = None,
+                 block: Optional[tuple] = None,
+                 plan_hints: Optional[dict] = None):
+    """`qdot` on an N-device mesh — the paper's N-core cluster (fig. 9).
+
+    Packed weights + per-channel epilogue vectors are tensor-parallel over
+    the output-feature axis N (``tp_axis``); activation rows are
+    data-parallel over ``dp_axis`` (padded to a multiple, sliced back).
+    K is never sharded, so each shard runs the full eq. 2-4 pipeline
+    locally and the result is bit-exact vs single-device — no psum.
+    The inner backend resolves on the *local* shard shape.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import sharding as shrules
+
+    backend, block = _merge_hints(backend, block, plan_hints)
+    dp, tp, dpe, tpe = _cluster_prologue(mesh, dp_axis, tp_axis)
+    wspecs = shrules.packed_linear_specs(params, mesh, tp_axis=tp_axis)
+
+    x2, lead = _flatten_lead(x_hat)
+    m = x2.shape[0]
+    x2 = _pad_axis(x2, dp, 0)
+    n = params.w_packed.shape[1]
+    k_pad = params.w_packed.shape[0] * packing.pack_factor(params.w_bits)
+    m_loc, n_loc = x2.shape[0] // dp, n // tp
+    spec = _reject_host_backend(
+        resolve("qdot", (m_loc, k_pad, n_loc), params.a_bits,
+                params.w_bits, backend=backend))
+    if block is None:
+        block = tune.get_block("qdot", (m_loc, k_pad, n_loc), params.a_bits,
+                               params.w_bits, spec.name)
+    per_n = np.ndim(scale) == 1  # per-channel dequant scale shards with N
+    sc = jnp.asarray(scale)
+
+    def local(xs, wp, kappa, lam, mm, s):
+        p_loc = dataclasses.replace(params, w_packed=wp, kappa=kappa,
+                                    lam=lam, m=mm)
+        xp = packing.pack(packing.pad_to_chunk(xs, axis=-1),
+                          params.a_bits, axis=-1)
+        return spec.run(p_loc, xp, epilogue=epilogue, scale=s, block=block)
+
+    out = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dpe, None), wspecs["w_packed"], wspecs["kappa"],
+                  wspecs["lam"], wspecs["m"],
+                  P(tpe) if per_n else P()),
+        out_specs=P(dpe, tpe), check_rep=False)(
+        x2, params.w_packed, params.kappa, params.lam, params.m, sc)
+    return out[:m].reshape(*lead, n)
+
+
+def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
+                  tp_axis: str = "model", epilogue: str = "int", scale=1.0,
+                  backend: Optional[str] = None,
+                  block: Optional[tuple] = None,
+                  plan_hints: Optional[dict] = None):
+    """`qconv` on an N-device mesh: images data-parallel over the batch
+    dim (padded to a ``dp`` multiple, sliced back), both packed weight
+    layouts + epilogue vectors tensor-parallel over Cout. Same psum-free
+    bit-exactness argument as `qdot_sharded` — a device is a cluster core
+    producing its own output-channel group.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import sharding as shrules
+
+    backend, block = _merge_hints(backend, block, plan_hints)
+    dp, tp, dpe, tpe = _cluster_prologue(mesh, dp_axis, tp_axis)
+    wspecs = shrules.packed_conv_specs(params, mesh, tp_axis=tp_axis)
+
+    nb = x_hat.shape[0]
+    x = _pad_axis(x_hat, dp, 0)
+    g = params.gemm
+    cout_loc = params.cout // tp
+    shape_loc = (x.shape[0] // dp, x.shape[1], x.shape[2], x.shape[3],
+                 params.fh, params.fw, params.stride, params.padding,
+                 cout_loc)
+    spec = _reject_host_backend(
+        resolve("qconv", shape_loc, g.a_bits, g.w_bits, backend=backend))
+    if block is None:
+        block = tune.get_block("qconv", shape_loc, g.a_bits, g.w_bits,
+                               spec.name)
+    per_n = np.ndim(scale) == 1
+    sc = jnp.asarray(scale)
+
+    def local(xs, wpf, wp, kappa, lam, mm, s):
+        g_loc = dataclasses.replace(g, w_packed=wp, kappa=kappa, lam=lam,
+                                    m=mm)
+        p_loc = dataclasses.replace(params, gemm=g_loc, w_packed_fused=wpf,
+                                    cout=cout_loc)
+        return spec.run(p_loc, xs, epilogue=epilogue, scale=s, block=block)
+
+    out = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dpe, None, None, None), wspecs["w_packed_fused"],
+                  wspecs["gemm"]["w_packed"], wspecs["gemm"]["kappa"],
+                  wspecs["gemm"]["lam"], wspecs["gemm"]["m"],
+                  P(tpe) if per_n else P()),
+        out_specs=P(dpe, None, None, tpe), check_rep=False)(
+        x, params.w_packed_fused, g.w_packed, g.kappa, g.lam, g.m, sc)
+    return out[:nb]
 
 
 # -------------------------------------------------------- qdot backends ---

@@ -11,6 +11,16 @@ plan-resolved bit-width instead of one uniform --quant:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --plan plan.json --requests 8
+
+Cluster-parallel serving: ``--mesh dp,tp`` builds a (data=dp, model=tp)
+device mesh (the paper's N-core cluster; on CPU force host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), shards request
+waves data-parallel over the `data` axis, and prints the per-device slot
+utilization report after serving:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --quant w4a8 --requests 8 --batch 4 --mesh 4,2
 """
 from __future__ import annotations
 
@@ -43,7 +53,31 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint dir to load params from")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serve on a (data=DP, model=TP) device mesh, "
+                         "e.g. --mesh 4,2; waves are sharded "
+                         "data-parallel over DP (batch must divide DP). "
+                         "On CPU, export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        try:
+            dp, tp = (int(v) for v in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"--mesh {args.mesh!r}: expected DP,TP (two comma-"
+                "separated ints), e.g. --mesh 4,2 or --mesh 8,1")
+        need = dp * tp
+        have = len(jax.devices())
+        if have < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices, found {have}; "
+                "on CPU set XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={need} before launching")
+        mesh = jax.make_mesh((dp, tp), ("data", "model"),
+                             devices=jax.devices()[:need])
 
     if args.smoke:
         from repro.models.api import get_smoke_config
@@ -94,7 +128,11 @@ def main():
         int(rng.integers(2, 8)),)).astype(np.int32),
         max_new_tokens=args.max_new) for _ in range(args.requests)]
     eng = Engine(model, params, batch_size=args.batch, max_len=args.max_len,
-                 plan=plan)
+                 plan=plan, mesh=mesh)
+    if mesh is not None:
+        print(f"mesh: data={mesh.shape['data']} model={mesh.shape['model']} "
+              f"({len(mesh.devices.flat)} devices; waves sharded over "
+              "'data')")
     if mode != "off":
         from repro.kernels.api import ENV_VAR
         kb = eng.kernel_backends()
@@ -106,6 +144,13 @@ def main():
     toks = sum(len(r.out) for r in out)
     print(f"{toks} tokens / {dt:.2f}s = {toks / dt:.1f} tok/s (CPU, "
           f"structure-comparative only)")
+    if mesh is not None:
+        rep = eng.utilization_report()
+        per = " ".join(f"d{d}={u:.0%}" for d, u in
+                       enumerate(rep["per_device"]))
+        print(f"cluster utilization: {rep['mean_util']:.0%} over "
+              f"{rep['waves']} wave(s) [{per}] — idle devices == padded "
+              "slots")
     for r in out[:3]:
         print("  prompt", r.prompt.tolist(), "->", r.out.tolist())
 

@@ -1,5 +1,14 @@
 """Activation-sharding context: logical constraints inside model code.
 
+**Paper analogy (XpulpNN §V):** an active mesh is the paper's parallel
+cluster — one JAX device per cluster core. `use_mesh` is the repo-wide
+way to enter that cluster context; everything layered above
+(`repro.kernels.api.qdot_sharded`, the serve engine's wave sharding, the
+GSPMD constraints below) assumes it. Packed sub-byte arrays inside the
+context obey the invariants in `repro.parallel.sharding`: sharded only on
+the output-feature axis, never on the packed reduction axis (a shard
+boundary inside a CHUNK group would split int8 containers across cores).
+
 Model code calls `constrain(x, axes)` (or `constrain_first(x, options)`)
 on major intermediates; when a mesh context is active (set by the step
 builders during tracing) this lowers to with_sharding_constraint with the

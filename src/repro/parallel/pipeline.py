@@ -11,6 +11,14 @@ collective-permutes the result to the next stage. Bubble fraction =
 Inter-pod links are the slowest in the hierarchy, which is exactly why
 pipelining (O(activations) point-to-point per microbatch) beats DP
 (O(grads) all-reduce) across pods at the 1T scale — see DESIGN.md §5.
+
+**Paper analogy:** the pod axis is the *multi-cluster* tier — the paper's
+SoC instantiating several 8-core clusters — while the in-pod `model` axis
+is the cluster itself (`repro.parallel.sharding`, device ↔ core). Stage
+params may be packed sub-byte artifacts: the stacking dim (dim0 of each
+stage slice) is a layer index, not a tensor axis, so sharding it over
+`pod` never touches the packed reduction axis and the per-stage kernels
+keep the psum-free epilogue invariant.
 """
 from __future__ import annotations
 

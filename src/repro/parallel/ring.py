@@ -4,6 +4,19 @@ matmul — the "below GSPMD" tools the §Perf Cell-B analysis identified
 layouts and falls back to replication; writing the collective schedule by
 hand fixes the pattern).
 
+**Paper analogy:** each shard_map body here is what one core of the
+XpulpNN cluster executes between synchronization points — the ring
+permutes play the role of the cluster's TCDM interconnect moving operand
+tiles between cores. Contrast with the *psum-free* quantized cluster path
+(`repro.kernels.api.qdot_sharded`): integer QNN GEMMs shard the
+output-feature axis and need no collective at all, while the float
+attention/matmul patterns here genuinely need cross-device combines —
+which is why they get hand-written schedules. Packed sub-byte operands
+never enter these ring paths: the sharding invariant (packed reduction
+axis unsharded, `repro.parallel.sharding`) means a K-sharded collective
+matmul over packed weights would split CHUNK containers and is rejected
+at spec level.
+
 ring_decode_attention — flash-decoding over a KV cache sequence-sharded on
 the `model` axis: each shard computes partial (numerator, denominator,
 max) over its KV slice and one log-sum-exp combine (psum of O(B*H*Dh))

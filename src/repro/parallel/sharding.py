@@ -1,5 +1,12 @@
 """Logical-axis sharding rules (MaxText-style) -> PartitionSpecs.
 
+**Paper analogy (XpulpNN fig. 9).** A JAX mesh device plays one core of
+the paper's tightly-coupled 8-core PULP cluster: the `model` axis is the
+cluster (operands resident per core, collective-free integer inner
+loops), `data`/`pod` is multi-cluster scale-out. The paper's near-linear
+1->8-core MAC/cycle scaling corresponds here to per-device FLOPs/bytes
+falling as 1/n with no growth in collective bytes.
+
 The mesh axes are ("data", "model") per pod and ("pod", "data", "model")
 across pods. Default assignment:
 
@@ -10,9 +17,27 @@ across pods. Default assignment:
   kv_seq       -> model          SP: long-context KV cache sharding
   layers/stack -> None           (replicated stacking dim)
 
-The PULP-cluster analogy (DESIGN.md): `model` plays the tightly-coupled
-8-core cluster (operands resident, collective-free inner loops), `data`/
-`pod` plays multi-cluster scale-out.
+**Sharding invariants for packed sub-byte arrays** (the W{8,4,2}
+deployment artifacts, `repro.core.packing`): a packed weight array
+`w_packed` has shape (K_pad // pack_factor, N) — its *packed* dim is the
+reduction axis and is NOT the logical K (one int8 container holds
+`pack_factor` logical elements, chunk-planar within CHUNK-element
+groups). The cluster path therefore shards packed operands **only on the
+output-feature axis N** (`model`, tensor-parallel):
+
+  * N-sharding keeps every CHUNK group intact on one device, so shards
+    unpack locally with zero cross-device fixup;
+  * the int32 accumulation of eq. (2) runs over the full (unsharded) K on
+    each device, so the BN + requant epilogue (eqs. 3/4, all per-N
+    parameters) is local per shard — **no psum anywhere**, mirroring the
+    paper's cores writing disjoint output-channel groups into TCDM;
+  * sharding the packed K axis is forbidden unless the split lands on a
+    CHUNK // pack_factor container boundary AND a psum is added after the
+    partial GEMMs; `packed_linear_specs` never produces such a spec.
+
+Per-output-channel epilogue vectors (kappa, lam, m, per-channel dequant
+scale) shard with N. `shard_packed_linear` / `shard_packed_conv` apply
+these rules to whole artifacts.
 """
 from __future__ import annotations
 
@@ -141,6 +166,79 @@ def cache_shardings(cache_shapes, mesh: Mesh,
                 mesh, P(None, entry, *([None] * (len(shape) - 2))))
         return NamedSharding(mesh, P(*([None] * len(shape))))
     return jax.tree.map(one, cache_shapes)
+
+
+# ------------------------------------------------- packed QNN artifacts ---
+
+def cluster_axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    """Size of a mesh axis, treating an absent/None axis as 1 (so callers
+    can pass pure-DP or pure-TP meshes without special-casing)."""
+    if axis is None or axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[axis]
+
+
+def axis_entry(mesh: Mesh, axis: Optional[str]):
+    """PartitionSpec entry for an axis: None when the axis is absent (the
+    spec must not name axes the mesh does not have). Public counterpart
+    of `cluster_axis_size` — the cluster path in `repro.kernels.api` uses
+    the pair to tolerate pure-DP / pure-TP meshes."""
+    return axis if axis is not None and axis in mesh.axis_names else None
+
+
+def packed_linear_specs(params, mesh: Mesh, *, tp_axis: str = "model"):
+    """PartitionSpecs for a `QuantizedLinearParams` artifact, TP over the
+    output-feature axis N (see module docstring for why only N).
+
+    Returns a dict: ``w_packed`` -> P(None, tp), ``kappa``/``lam``/``m``
+    -> P(tp). The packed reduction axis stays unsharded by construction.
+    Raises when N does not divide the tp axis — packed weights are static
+    deployment artifacts, so a silent replication fallback would hide a
+    mis-sized mesh rather than tolerate a ragged batch.
+    """
+    tp = cluster_axis_size(mesh, tp_axis)
+    n = params.w_packed.shape[1]
+    if n % tp != 0:
+        raise ValueError(
+            f"packed linear: output features N={n} not divisible by "
+            f"mesh axis {tp_axis!r} size {tp}; pad Cout at quantization "
+            "time or use a smaller cluster")
+    ent = axis_entry(mesh, tp_axis) if tp > 1 else None
+    return {"w_packed": P(None, ent), "kappa": P(ent), "lam": P(ent),
+            "m": P(ent)}
+
+
+def shard_packed_linear(params, mesh: Mesh, *, tp_axis: str = "model"):
+    """device_put a `QuantizedLinearParams` with `packed_linear_specs`
+    (weights resident per shard before serving — the cluster's
+    weight-stationary setup step)."""
+    specs = packed_linear_specs(params, mesh, tp_axis=tp_axis)
+    put = lambda a, s: jax.device_put(a, NamedSharding(mesh, s))
+    return dataclasses.replace(
+        params,
+        w_packed=put(params.w_packed, specs["w_packed"]),
+        kappa=put(params.kappa, specs["kappa"]),
+        lam=put(params.lam, specs["lam"]),
+        m=put(params.m, specs["m"]))
+
+
+def packed_conv_specs(params, mesh: Mesh, *, tp_axis: str = "model"):
+    """PartitionSpecs for a `QuantizedConvParams` artifact: the fused
+    per-tap layout ``w_packed_fused`` (K_tap_pad//pf, Cout) shards on Cout
+    exactly like the GEMM layout; both layouts plus the per-Cout epilogue
+    vectors move together so every backend sees consistent shards."""
+    gemm = packed_linear_specs(params.gemm, mesh, tp_axis=tp_axis)
+    return {"gemm": gemm, "w_packed_fused": gemm["w_packed"]}
+
+
+def shard_packed_conv(params, mesh: Mesh, *, tp_axis: str = "model"):
+    """device_put a `QuantizedConvParams` with `packed_conv_specs`."""
+    specs = packed_conv_specs(params, mesh, tp_axis=tp_axis)
+    gemm = shard_packed_linear(params.gemm, mesh, tp_axis=tp_axis)
+    wpf = jax.device_put(
+        params.w_packed_fused,
+        NamedSharding(mesh, specs["w_packed_fused"]))
+    return dataclasses.replace(params, gemm=gemm, w_packed_fused=wpf)
 
 
 def _kv_spec(shape, mesh, rules):

@@ -4,6 +4,26 @@ Static-batch continuous decoding (slot-based): requests occupy slots; a
 finished slot (EOS/max_len) is refilled from the queue at the next prefill
 opportunity. Weights may be packed sub-byte (QuantConfig mode='int') — the
 paper's deployment artifact; the KV cache may be int8 (kv_quant_bits=8).
+
+**Cluster-parallel serving (paper fig. 9 analogy: one JAX mesh device ↔
+one core of the 8-core PULP cluster).** With ``mesh=`` the engine shards
+every request wave data-parallel over the mesh's ``dp_axis``: the wave's
+token/cache batch dim is laid out so device *d* owns the contiguous slot
+range ``[d*B/dp, (d+1)*B/dp)``, params are replicated across the mesh,
+and the jitted decode step runs SPMD — the serving analogue of the paper's
+cores each processing a disjoint slice of the im2col batch. The last wave
+of a ragged request list is padded to the full batch (pads never leak into
+results — tracked by ``n_real``), and the engine records, per wave, how
+many *real* slots each device carried; `utilization_report()` aggregates
+this into the per-device utilization the paper's fig. 9 reads off the
+cluster (idle cores == padded slots == lost speedup).
+
+Sharding invariants for packed sub-byte params mirror
+`repro.parallel.sharding`: packed weight arrays ride along replicated here
+(wave DP), or pre-sharded over the output-feature axis by
+`shard_packed_linear`/`shard_packed_conv` when the kernel-level cluster
+path (`repro.kernels.api.qdot_sharded`) is in play — never sharded on the
+packed reduction axis.
 """
 from __future__ import annotations
 
@@ -26,16 +46,38 @@ class Request:
 
 class Engine:
     def __init__(self, model: Model, params, batch_size: int,
-                 max_len: int, eos_id: int = 1, plan=None):
+                 max_len: int, eos_id: int = 1, plan=None,
+                 mesh=None, dp_axis: str = "data"):
         """`plan`: optional mixed-precision `PrecisionPlan` the params were
         packed with (repro.deploy) — kept for introspection/reporting; the
-        packed shapes themselves already encode the per-layer bit-widths."""
+        packed shapes themselves already encode the per-layer bit-widths.
+
+        `mesh`: optional device mesh; request waves are sharded
+        data-parallel over `dp_axis` (batch_size must divide the axis so
+        every device owns whole slots), params are replicated, and
+        per-wave per-device slot utilization is recorded.
+        """
         self.model = model
-        self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.eos = eos_id
         self.plan = plan
+        self.mesh = mesh
+        self.dp_axis = dp_axis
+        self.wave_stats: List[dict] = []
+        if mesh is not None:
+            from repro.parallel.sharding import cluster_axis_size
+            self._dp = cluster_axis_size(mesh, dp_axis)
+            if batch_size % self._dp != 0:
+                raise ValueError(
+                    f"batch_size={batch_size} must be divisible by mesh "
+                    f"axis {dp_axis!r} size {self._dp} so each device "
+                    "owns whole request slots")
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            params = jax.device_put(params, NamedSharding(mesh, P()))
+        else:
+            self._dp = 1
+        self.params = params
         self._decode = jax.jit(model.decode)
 
     def artifact_bytes(self) -> int:
@@ -49,10 +91,59 @@ class Engine:
         from repro.kernels import api
         return {op: api.default_backend(op) for op in api.OPS}
 
+    # ---------------------------------------------- wave sharding ----
+
+    def _put_wave(self, arr):
+        """Shard a wave-batched array (dim0 = slots) over the DP axis;
+        a mesh without that axis serves replicated (dp=1), matching the
+        kernel-level cluster path's pure-TP tolerance."""
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import axis_entry
+        spec = P(axis_entry(self.mesh, self.dp_axis),
+                 *([None] * (np.ndim(arr) - 1)))
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh, spec))
+
+    def _put_cache(self, cache):
+        """Shard the decode cache's batch dim (layout-aware, see
+        `repro.parallel.sharding.cache_shardings`)."""
+        if self.mesh is None:
+            return cache
+        from repro.parallel.sharding import cache_shardings
+        return jax.device_put(cache, cache_shardings(cache, self.mesh))
+
+    def _record_wave(self, n_real: int):
+        """Per-device slot utilization of one wave: device d owns slots
+        [d*b_loc, (d+1)*b_loc); real (unpadded) slots fill from 0."""
+        b_loc = self.batch // self._dp
+        per_dev = [min(max(n_real - d * b_loc, 0), b_loc) / b_loc
+                   for d in range(self._dp)]
+        self.wave_stats.append({"n_real": n_real, "batch": self.batch,
+                                "per_device": per_dev})
+
+    def utilization_report(self) -> dict:
+        """Aggregate per-device slot utilization across the waves served
+        so far — the fig. 9 'idle cores' readout for serving: a device
+        whose slots were padding did no useful decode work."""
+        if not self.wave_stats:
+            return {"devices": self._dp, "waves": 0, "mean_util": 0.0,
+                    "per_device": [0.0] * self._dp}
+        per_dev = [float(np.mean([w["per_device"][d]
+                                  for w in self.wave_stats]))
+                   for d in range(self._dp)]
+        return {"devices": self._dp, "waves": len(self.wave_stats),
+                "mean_util": float(np.mean(per_dev)),
+                "per_device": per_dev}
+
+    # -------------------------------------------------- serving ----
+
     def _prefill_scored(self, prompts):
         """Prefill via teacher-forced forward, then replay tokens into the
         decode cache (keeps one code path for cache layout)."""
-        cache = self.model.init_cache(self.batch, self.max_len)
+        cache = self._put_cache(
+            self.model.init_cache(self.batch, self.max_len))
         max_p = max(len(p) for p in prompts)
         toks = np.zeros((self.batch, max_p), np.int32)
         for i, p in enumerate(prompts):
@@ -61,13 +152,13 @@ class Engine:
         logits = None
         for t in range(max_p):
             logits, cache = self._decode(
-                self.params, cache, jnp.asarray(toks[:, t:t + 1]),
+                self.params, cache, self._put_wave(toks[:, t:t + 1]),
                 jnp.int32(t))
         return logits, cache, max_p
 
     def generate(self, requests: List[Request], greedy: bool = True,
                  seed: int = 0) -> List[Request]:
-        """Serve a list of requests in fixed-size batches."""
+        """Serve a list of requests in fixed-size (mesh-sharded) waves."""
         rng = np.random.default_rng(seed)
         done: List[Request] = []
         queue = list(requests)
@@ -75,6 +166,7 @@ class Engine:
             wave = queue[: self.batch]
             queue = queue[self.batch:]
             n_real = len(wave)  # pads below must never reach `done`
+            self._record_wave(n_real)
             while len(wave) < self.batch:  # pad the last wave
                 wave.append(Request(prompt=np.array([0], np.int32),
                                     max_new_tokens=1))
@@ -100,7 +192,7 @@ class Engine:
                         if nxt[i] == self.eos or len(outs[i]) >= budget[i]:
                             alive[i] = False
                 logits, cache = self._decode(
-                    self.params, cache, jnp.asarray(nxt[:, None]),
+                    self.params, cache, self._put_wave(nxt[:, None]),
                     jnp.int32(pos + step))
                 step += 1
             for r, o in zip(wave, outs):

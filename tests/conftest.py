@@ -1,5 +1,10 @@
 """Shared fixtures + suite plumbing.
 
+* 8 host-platform devices — set before the first jax import so the
+  multi-device suite (sharded qdot/qconv parity, ring/pipeline
+  collectives, engine wave sharding) exercises a real 8-"core" cluster
+  mesh on CPU. An externally-set ``XLA_FLAGS`` wins (the CI parity job
+  pins its own device count).
 * ``rng`` — the deterministic numpy Generator every test uses.
 * ``slow`` marker — long-running tests (CLI subprocess smokes, many-arch
   sweeps) are deselected by default so tier-1 stays fast; run them with
@@ -10,6 +15,13 @@
   (a stricter variant of ``pytest.importorskip("hypothesis")``, which
   would skip the non-property tests in the same file too).
 """
+import os
+import sys
+
+if "jax" not in sys.modules:  # too late to matter otherwise
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 import numpy as np
 import pytest
 

@@ -49,6 +49,49 @@ def test_generate_multiwave_pads_never_leak():
     assert len(out4) == 1 and out4[0] is solo[0]
 
 
+def test_engine_wave_sharding_ragged():
+    """Mesh-sharded engine == meshless engine on a ragged request list
+    (5 requests, batch 4 -> a full wave + a 1/4 wave), with a sane
+    per-device utilization report."""
+    import pytest
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >=4 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+    tp = len(jax.devices()) // 4
+    mesh = jax.make_mesh((4, tp), ("data", "model"),
+                         devices=jax.devices()[: 4 * tp])
+    cfg = smoke_config()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mk = lambda: [Request(prompt=np.array([3 + i, 5], np.int32),
+                          max_new_tokens=3) for i in range(5)]
+    want = Engine(model, params, batch_size=4, max_len=32).generate(mk())
+    eng = Engine(model, params, batch_size=4, max_len=32, mesh=mesh)
+    reqs = mk()
+    got = eng.generate(reqs)
+    assert len(got) == 5 and all(g is r for g, r in zip(got, reqs))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.out, w.out)
+    rep = eng.utilization_report()
+    assert rep["devices"] == 4 and rep["waves"] == 2
+    # wave 1 full (all devices 100%), wave 2 has 1 real slot of 4 ->
+    # device 0 busy, devices 1-3 idle; means are [1, .5, .5, .5]
+    assert rep["per_device"] == [1.0, 0.5, 0.5, 0.5]
+    assert abs(rep["mean_util"] - 0.625) < 1e-9
+    # batch that can't split into whole slots per device is rejected
+    with pytest.raises(ValueError, match="divisible"):
+        Engine(model, params, batch_size=3, max_len=32, mesh=mesh)
+    # a mesh without the dp axis serves replicated (pure-TP tolerance,
+    # same as the kernel cluster path) rather than crashing mid-wave
+    tp_mesh = jax.make_mesh((2,), ("model",), devices=jax.devices()[:2])
+    eng_tp = Engine(model, params, batch_size=4, max_len=32, mesh=tp_mesh)
+    got_tp = eng_tp.generate(mk())
+    for g, w in zip(got_tp, want):
+        np.testing.assert_array_equal(g.out, w.out)
+    assert eng_tp.utilization_report()["devices"] == 1
+
+
 def test_generate_deterministic():
     cfg = smoke_config()
     model = build(cfg)

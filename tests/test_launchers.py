@@ -10,11 +10,17 @@ pytestmark = pytest.mark.slow
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
-def _run(args):
+def _run(args, extra_env=None):
+    import os
+
+    # pin the jax platform: without it each subprocess burns minutes
+    # probing for accelerator plugins before falling back to CPU
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+    env.update(extra_env or {})
     return subprocess.run(
         [sys.executable, "-m"] + args, cwd=ROOT, capture_output=True,
-        text=True, timeout=500,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        text=True, timeout=500, env=env)
 
 
 def test_train_cli(tmp_path):
@@ -29,6 +35,41 @@ def test_serve_cli():
               "--quant", "w4a8", "--requests", "2", "--batch", "2",
               "--max-new", "4"])
     assert "tok/s" in r.stdout, r.stderr[-1500:]
+
+
+def test_serve_cli_mesh():
+    """--mesh dp,tp serves on a forced-host-device cluster and prints the
+    per-device utilization report."""
+    r = _run(["repro.launch.serve", "--arch", "qwen2.5-3b", "--smoke",
+              "--quant", "w4a8", "--requests", "6", "--batch", "4",
+              "--max-new", "4", "--mesh", "4,2"],
+             extra_env={"XLA_FLAGS":
+                        "--xla_force_host_platform_device_count=8"})
+    assert "mesh: data=4 model=2" in r.stdout, r.stderr[-1500:]
+    assert "cluster utilization" in r.stdout
+    assert "d3=50%" in r.stdout  # wave 2 carries 2 real of 4 slots
+
+
+def test_fig9_cluster_bench_cli(tmp_path):
+    """The fig. 9 benchmark runs the sharded path end-to-end over
+    --devices 1,2,4,8 and emits BENCH_cluster.json with a speedup
+    column (ISSUE-4 acceptance criterion; the script forces 8 host
+    devices itself when XLA_FLAGS is unset)."""
+    import json
+
+    out = tmp_path / "BENCH_cluster.json"
+    r = _run(["benchmarks.fig9_cluster_scaling", "--devices", "1,2,4,8",
+              "--json", str(out)])
+    assert out.exists(), r.stderr[-1500:]
+    d = json.loads(out.read_text())
+    assert d["path"] == "repro.kernels.api.qdot_sharded"
+    rows = d["rows"]
+    assert {row["devices"] for row in rows} == {1, 2, 4, 8}
+    assert {row["bits"] for row in rows} == {8, 4, 2}
+    for row in rows:
+        assert "speedup" in row and "efficiency" in row
+        if row["devices"] == 1:
+            assert row["speedup"] == 1.0
 
 
 def test_deploy_then_serve_plan_cli(tmp_path):
