@@ -8,7 +8,7 @@ from repro.core.quantize import (QuantSpec, QuantizedLinearParams,
                                  quantize, dequantize, fake_quantize,
                                  lin, batchnorm_int, qnt_act,
                                  requantize_shift, requantize_shift_i64,
-                                 fold_bn_requant, quantize_linear,
-                                 M_BITS, D_MIN, D_MAX)
+                                 fold_bn_requant, pick_requant_md,
+                                 quantize_linear, M_BITS, D_MIN, D_MAX)
 from repro.core.calibration import (calibrate_weight, calibrate_activation,
                                     RunningCalibrator)

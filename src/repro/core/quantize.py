@@ -153,6 +153,27 @@ def qnt_act(phi_prime, m, d, out_bits: int):
     return jnp.clip(y, 0, hi).astype(jnp.int8)
 
 
+def pick_requant_md(ratio: float, d_min: int = D_MIN) -> tuple:
+    """Largest-precision ``(m, d)`` with ``m = round(ratio * 2^d) < 2^15``.
+
+    ``ratio`` is the real requantization factor (eps_in / eps_out terms);
+    ``d_min`` is the smallest admissible shift — `D_MIN` (16) when the
+    requant runs through :func:`requantize_shift` (the int32 hi/lo split
+    needs it), 0 for small-operand requants (e.g. residual add, where
+    ``m * x`` fits int32 directly). Shared by `fold_bn_requant` and the
+    vision-layer folds (avg-pool, residual add).
+    """
+    ratio = float(ratio)
+    if ratio <= 0:
+        raise ValueError("invalid quanta")
+    d = min(D_MAX, int(np.floor(np.log2((1 << M_BITS) - 1) - np.log2(ratio))))
+    if d < d_min:
+        raise ValueError(
+            f"requant ratio {ratio} too large for int32 requant "
+            f"(d={d} < {d_min}); re-calibrate output quantum")
+    return int(np.round(ratio * (1 << d))), d
+
+
 def fold_bn_requant(eps_w: float, eps_x: float, eps_y: float,
                     bn_scale, bn_bias,
                     bits_out: int,
@@ -179,16 +200,9 @@ def fold_bn_requant(eps_w: float, eps_x: float, eps_y: float,
     lambda_hat = np.round(bn_bias / eps_phi_p).astype(np.int32)
 
     ratio = eps_phi_p / float(eps_y)
-    if ratio <= 0:
-        raise ValueError("invalid quanta")
     # largest d in [D_MIN, D_MAX] with m = round(ratio * 2^d) < 2^M_BITS
-    d = min(D_MAX, int(np.floor(np.log2((1 << M_BITS) - 1) - np.log2(ratio))))
-    if d < D_MIN:
-        raise ValueError(
-            f"requant ratio {ratio} too large for int32 requant (d={d} < 16); "
-            "re-calibrate output quantum")
-    m = np.round(ratio * (1 << d)).astype(np.int32)
-    m = np.broadcast_to(m, bn_scale.shape).copy()
+    m_scalar, d = pick_requant_md(ratio)
+    m = np.broadcast_to(np.int32(m_scalar), bn_scale.shape).copy()
     return (jnp.asarray(kappa_hat), jnp.asarray(lambda_hat),
             jnp.asarray(m), d)
 

@@ -19,6 +19,7 @@ _LAZY = {
     "quantized_dense_paths": "repro.deploy.apply",
     "CalibStats": "repro.deploy.calibrate",
     "calibrate": "repro.deploy.calibrate",
+    "calibrate_vision": "repro.deploy.calibrate",
     "auto_budget": "repro.deploy.planner",
     "plan_mixed_precision": "repro.deploy.planner",
 }

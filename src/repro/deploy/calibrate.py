@@ -1,4 +1,4 @@
-"""Calibration: per-dense activation ranges + bit-width sensitivity proxies.
+"""Calibration: per-layer activation ranges + bit-width sensitivity proxies.
 
 An *eager* layer-by-layer replay of the fp model (no jit, no scan — stacked
 layer params are indexed per depth) with the `nn/layers.py::dense_tap`
@@ -19,6 +19,18 @@ these against packed-byte savings.
 Families without an eager replay (encdec/mamba/griffin and cross-attn LMs)
 fall back to weight-only sensitivities (activation second moment assumed
 1.0, default absmax) — still a usable ordering, just less sharp.
+
+**CNNs** (`repro.vision`) calibrate through `calibrate_vision`: the
+`repro.vision.layers::conv_tap` observer (the conv analogue of
+`dense_tap`) records per-conv/depthwise/head input absmax and a simulated
+W{b}A8 output-MSE sensitivity — the quantized op is simulated on the
+layer's real geometry (stride/padding/groups from the graph) with the
+same *per-tensor* symmetric weight grids the vision packers deploy
+(`calibrate_weight`; the LM denses use per-output-channel grids instead) —
+while an `edge_tap` records every layer-boundary absmax, which
+`repro.vision.models.quantize_net` turns into the chained activation
+grids. The same `CalibStats` come out, so `plan_mixed_precision` searches
+CNN plans with zero changes.
 """
 from __future__ import annotations
 
@@ -187,3 +199,140 @@ def calibrate(model, fp_params, token_batches: Sequence[np.ndarray], *,
     else:
         _weight_only(stats, fp_params, bits, default_a_absmax)
     return stats
+
+
+# -------------------------------------------------------------- vision ---
+
+def _sim_quant_weights(w, b: int):
+    """Quantize-dequantize ``w`` on the *per-tensor* symmetric grid the
+    vision packers deploy (`calibrate_weight` -> `quantize` in
+    `repro.vision.layers` — NOT the LM zoo's per-output-channel grids;
+    the sim must price exactly the grid that will serve)."""
+    from repro.core.calibration import calibrate_weight
+    from repro.core.quantize import dequantize, quantize as q_int
+
+    spec = calibrate_weight(w, b)
+    return dequantize(q_int(w, spec), spec)
+
+
+def _sim_int_conv(x, w, b: int, a_bits: int, absmax: float, *,
+                  stride: int, padding: int, groups: int):
+    """Simulated W{b}A{a_bits} conv for the sensitivity proxy: weights on
+    the deployed per-tensor symmetric grid (`_sim_quant_weights`),
+    activations symmetric on the a_bits grid — the quantize-dequantize
+    image of the deployed integer conv, on the layer's real geometry."""
+    from repro.vision.layers import conv2d_raw
+
+    w_q = _sim_quant_weights(w, b)
+    if w.ndim == 3:          # depthwise (fh, fw, C) -> HWIO with I=1
+        w_q = w_q.reshape(*w.shape[:2], 1, w.shape[-1])
+    a_max = packing.int_range(a_bits, True)[1]
+    a_scale = max(absmax, 1e-8) / a_max
+    x_q = jnp.clip(jnp.round(x / a_scale), -a_max, a_max) * a_scale
+    return conv2d_raw(x_q, w_q, stride=stride, padding=padding,
+                      groups=groups)
+
+
+class _ConvCollector:
+    """`conv_tap` observer for the vision fp replay — the CNN analogue of
+    `_Collector`: per-layer input absmax + simulated-W{b} output-MSE
+    sensitivity, priced against the fp conv on the layer's geometry."""
+
+    def __init__(self, stats: Dict[str, CalibStats], geom: Dict[str, dict],
+                 bits: Sequence[int], a_bits: int, max_images: int):
+        self.stats = stats
+        self.geom = geom           # path -> {stride, padding, groups, w}
+        self.bits = tuple(bits)
+        self.a_bits = a_bits
+        self.max_images = max_images
+        self.id2path: Dict[int, str] = {}
+
+    def __call__(self, p, x):
+        from repro.vision.layers import conv2d_raw
+
+        w = p.get("w")
+        path = self.id2path.get(id(w)) if w is not None else None
+        if path is None or path not in self.stats:
+            return
+        st = self.stats[path]
+        g = self.geom[path]
+        xf = jnp.asarray(x, jnp.float32)
+        absmax = float(jnp.max(jnp.abs(xf)))
+        st.a_absmax = max(st.a_absmax, absmax)
+        if xf.ndim == 4 and xf.shape[0] > self.max_images:
+            xf = xf[:self.max_images]
+        wf = jnp.asarray(w, jnp.float32)
+        if g["kind"] == "linear":
+            y_ref = xf @ wf
+        else:
+            w4 = (wf.reshape(*wf.shape[:2], 1, wf.shape[-1])
+                  if wf.ndim == 3 else wf)
+            y_ref = conv2d_raw(xf, w4, stride=g["stride"],
+                               padding=g["padding"], groups=g["groups"])
+        st.sq_ref += float(jnp.sum(y_ref * y_ref))
+        for b in self.bits:
+            if g["kind"] == "linear":
+                # the vision head deploys per-tensor grids
+                # (`quantize_linear_head`), unlike the LM denses
+                a_max = packing.int_range(self.a_bits, True)[1]
+                a_scale = max(absmax, 1e-8) / a_max
+                x_q = jnp.clip(jnp.round(xf / a_scale), -a_max,
+                               a_max) * a_scale
+                y_q = x_q @ _sim_quant_weights(wf, b)
+            else:
+                y_q = _sim_int_conv(xf, wf, b, self.a_bits, absmax,
+                                    stride=g["stride"],
+                                    padding=g["padding"],
+                                    groups=g["groups"])
+            err = y_q - y_ref
+            st.sq_err[b] = st.sq_err.get(b, 0.0) + float(jnp.sum(err * err))
+        st.taps += 1
+
+
+def calibrate_vision(cfg, fp_params, image_batches: Sequence[np.ndarray], *,
+                     bits: Sequence[int] = CANDIDATE_BITS, a_bits: int = 8,
+                     max_images: int = 64):
+    """Calibrate a vision net: (per-layer `CalibStats`, per-edge absmax).
+
+    `cfg` is a `repro.vision.models.VisionConfig`; `image_batches` are
+    (B, H, W, C) float arrays. The stats feed `plan_mixed_precision`
+    unchanged; the absmax dict feeds
+    `repro.vision.models.quantize_net` (activation-grid chaining).
+    """
+    from repro.vision.layers import conv_tap
+    from repro.vision.models import (COMPUTE_KINDS, forward_fp, get_path,
+                                     trace_shapes)
+
+    stats: Dict[str, CalibStats] = {}
+    geom: Dict[str, dict] = {}
+    id2path: Dict[int, str] = {}
+    for t in trace_shapes(cfg):
+        L, (h, w, c) = t["layer"], t["in"]
+        if L.kind not in COMPUTE_KINDS:
+            continue
+        node = get_path(fp_params, L.path)
+        if L.kind == "conv":
+            d_in, d_out, groups = L.fh * L.fw * c, L.cout, 1
+        elif L.kind == "dwconv":
+            # the deployable block-diagonal artifact is (fh*fw*C, C)
+            d_in, d_out, groups = L.fh * L.fw * c, c, c
+        else:
+            d_in, d_out, groups = c, L.cout, 1
+        stats[L.path] = CalibStats(L.path, 1, d_in, d_out)
+        geom[L.path] = {"kind": L.kind, "stride": L.stride,
+                        "padding": L.padding, "groups": groups}
+        id2path[id(node["w"])] = L.path
+
+    absmax: Dict[str, float] = {}
+
+    def edge_tap(path, tensor):
+        absmax[path] = max(absmax.get(path, 0.0),
+                           float(jnp.max(jnp.abs(tensor))))
+
+    collector = _ConvCollector(stats, geom, bits, a_bits, max_images)
+    collector.id2path = id2path
+    with conv_tap(collector):
+        for imgs in image_batches:
+            forward_fp(cfg, fp_params, jnp.asarray(imgs, jnp.float32),
+                       edge_tap=edge_tap)
+    return stats, absmax

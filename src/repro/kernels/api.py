@@ -137,7 +137,7 @@ def default_backend(op: str, shape=None, a_bits: int = 8,
     """Name the default resolution would pick (diagnostics/banners)."""
     if shape is None:
         shape = ((256, 1024, 1024) if op == "qdot"
-                 else (1, 16, 16, 32, 3, 3, 1, 1, 64))
+                 else (1, 16, 16, 32, 3, 3, 1, 1, 64, 1))
     return resolve(op, shape, a_bits, w_bits).name
 
 
@@ -271,9 +271,33 @@ def qdot_packed(params, x_packed, *, epilogue: str = "int", scale=1.0,
 # ----------------------------------------------------------- qconv entry ---
 
 def _conv_shape(params, x_hat):
+    """qconv shape key: (n, h, w, cin, fh, fw, stride, padding, cout,
+    groups). ``groups`` (grouped/depthwise conv) rides at the tail so
+    ``supports()`` can reject grouped geometry it cannot lower; helpers
+    accept the legacy 9-tuple (groups=1) for hand-built keys."""
     n, h, w, cin = x_hat.shape
     return (n, h, w, cin, params.fh, params.fw, params.stride,
-            params.padding, params.cout)
+            params.padding, params.cout, getattr(params, "groups", 1))
+
+
+def conv_shape_groups(shape) -> int:
+    return int(shape[9]) if len(shape) > 9 else 1
+
+
+def _check_grouped(params, spec, shape):
+    """Explicit ``backend=`` bypasses capability resolution, so grouped
+    params must be re-checked against ``supports`` here — running a
+    grouped conv through an ungrouped lowering would silently contract
+    the wrong K (mis-shaped output, no error)."""
+    if conv_shape_groups(shape) == 1:
+        return
+    if not spec.supports(shape, params.gemm.a_bits, params.gemm.w_bits,
+                         platform()):
+        raise ValueError(
+            f"qconv backend {spec.name!r} does not support grouped conv "
+            f"(groups={params.groups}); lower depthwise/grouped layers via "
+            "repro.vision.layers.QDepthwiseConv2D (per-group qconv or "
+            "block-diagonal im2col + qdot)")
 
 
 def qconv(params, x_hat, *, epilogue: str = "int", scale=1.0,
@@ -295,6 +319,7 @@ def qconv(params, x_hat, *, epilogue: str = "int", scale=1.0,
     shape = _conv_shape(params, x_hat)
     g = params.gemm
     spec = resolve("qconv", shape, g.a_bits, g.w_bits, backend=backend)
+    _check_grouped(params, spec, shape)
     if block is None:
         block = tune.get_block("qconv", shape, g.a_bits, g.w_bits, spec.name)
     return spec.run(params, x_hat, epilogue=epilogue, scale=scale,
@@ -402,9 +427,10 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     cout_loc = params.cout // tp
     shape_loc = (x.shape[0] // dp, x.shape[1], x.shape[2], x.shape[3],
                  params.fh, params.fw, params.stride, params.padding,
-                 cout_loc)
+                 cout_loc, getattr(params, "groups", 1))
     spec = _reject_host_backend(
         resolve("qconv", shape_loc, g.a_bits, g.w_bits, backend=backend))
+    _check_grouped(params, spec, shape_loc)
     if block is None:
         block = tune.get_block("qconv", shape_loc, g.a_bits, g.w_bits,
                                spec.name)
@@ -507,7 +533,9 @@ def _qdot_eager_run(params, x_packed, *, epilogue, scale, block=None):
 def _conv_fits_vmem(shape, a_bits, w_bits) -> bool:
     from repro.kernels.common import conv_default_block
 
-    n, h, w, cin, fh, fw, stride, padding, cout = shape
+    if conv_shape_groups(shape) != 1:
+        return False  # the fused kernel contracts the full fh*fw*cin axis
+    n, h, w, cin, fh, fw, stride, padding, cout = shape[:9]
     ho = (h + 2 * padding - fh) // stride + 1
     wo = (w + 2 * padding - fw) // stride + 1
     if ho <= 0 or wo <= 0:
@@ -584,6 +612,13 @@ def _always(shape, a_bits, w_bits, plat) -> bool:
     return True
 
 
+def _conv_ungrouped(shape, a_bits, w_bits, plat) -> bool:
+    # every registered conv lowering contracts one full fh*fw*cin GEMM;
+    # grouped/depthwise geometry must be lowered above the registry
+    # (repro.vision.layers) until a grouped backend registers itself
+    return conv_shape_groups(shape) == 1
+
+
 register("qdot", "pallas", supports=_on_tpu, run=_qdot_pallas_run,
          doc="Mosaic packed sub-byte GEMM kernel (TPU only)")
 register("qdot", "pallas_interpret", supports=_always,
@@ -602,7 +637,8 @@ register("qconv", "pallas_interpret",
          supports=lambda s, a, w, p: _conv_fits_vmem(s, a, w),
          run=_qconv_interpret_run,
          doc="fused conv kernel under the Pallas interpreter")
-register("qconv", "xla", supports=_always, run=_qconv_xla_run,
+register("qconv", "xla", supports=_conv_ungrouped, run=_qconv_xla_run,
          doc="XLA im2col + xla qdot (also the large-image fallback)")
-register("qconv", "eager_ref", supports=_always, run=_qconv_eager_run,
+register("qconv", "eager_ref", supports=_conv_ungrouped,
+         run=_qconv_eager_run,
          doc="direct-convolution numpy oracle (no shared im2col path)")

@@ -69,6 +69,12 @@ class QuantizedConvParams:
     # K = fh*fw*cin_pad, packed chunk-planar along K.
     w_packed_fused: jnp.ndarray = None
     cin_pad: int = 0
+    # filter groups (grouped/depthwise conv: cin is the *per-group* channel
+    # count, cout the total). No registered backend runs groups > 1 today —
+    # the registry rejects such params cleanly (see repro.kernels.api) and
+    # repro.vision.layers.QDepthwiseConv2D lowers depthwise onto the
+    # supported ops (per-group qconv, or block-diagonal im2col + qdot).
+    groups: int = 1
 
 
 def quantize_conv(w, spec_w: QuantSpec, bn_scale, bn_bias,

@@ -27,7 +27,12 @@ import pathlib
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
-CACHE_VERSION = 1
+# v2: qconv cache keys carry the grouped-conv tail (api._conv_shape grew
+# from 9 to 10 elements), so v1 artifacts' conv entries can never match a
+# lookup again — the version bump makes stale artifacts fail loudly
+# (`load`) or skip with a warning (env preload) instead of silently
+# missing on every lookup.
+CACHE_VERSION = 2
 CACHE_ENV = "REPRO_QTUNE_CACHE"
 
 
@@ -82,10 +87,16 @@ def _maybe_load_env():
     path = os.environ.get(CACHE_ENV)
     if not path:
         return
+    import warnings
     if pathlib.Path(path).exists():
-        merge(load(path))
+        try:
+            merge(load(path))
+        except ValueError as e:
+            warnings.warn(
+                f"{CACHE_ENV}={path}: {e}; no tuned blocks loaded — "
+                "re-run `python -m repro.kernels.tune` to regenerate",
+                RuntimeWarning, stacklevel=2)
     else:
-        import warnings
         warnings.warn(
             f"{CACHE_ENV}={path} does not exist; no tuned blocks loaded "
             "(every lookup falls back to the analytic block selectors)",

@@ -44,7 +44,37 @@ class Request:
     out: Optional[np.ndarray] = None
 
 
-class Engine:
+class _WaveStats:
+    """Per-wave per-device slot utilization bookkeeping, shared by the LM
+    `Engine` and the CNN `VisionEngine`: device d owns the contiguous
+    slot range [d*B/dp, (d+1)*B/dp); real (unpadded) slots fill from 0,
+    so a padded slot is an idle cluster core (the fig. 9 readout)."""
+
+    batch: int
+    _dp: int
+
+    def _record_wave(self, n_real: int):
+        b_loc = self.batch // self._dp
+        per_dev = [min(max(n_real - d * b_loc, 0), b_loc) / b_loc
+                   for d in range(self._dp)]
+        self.wave_stats.append({"n_real": n_real, "batch": self.batch,
+                                "per_device": per_dev})
+
+    def utilization_report(self) -> dict:
+        """Aggregate per-device slot utilization across the waves served
+        so far — a device whose slots were padding did no useful work."""
+        if not self.wave_stats:
+            return {"devices": self._dp, "waves": 0, "mean_util": 0.0,
+                    "per_device": [0.0] * self._dp}
+        per_dev = [float(np.mean([w["per_device"][d]
+                                  for w in self.wave_stats]))
+                   for d in range(self._dp)]
+        return {"devices": self._dp, "waves": len(self.wave_stats),
+                "mean_util": float(np.mean(per_dev)),
+                "per_device": per_dev}
+
+
+class Engine(_WaveStats):
     def __init__(self, model: Model, params, batch_size: int,
                  max_len: int, eos_id: int = 1, plan=None,
                  mesh=None, dp_axis: str = "data"):
@@ -114,29 +144,6 @@ class Engine:
         from repro.parallel.sharding import cache_shardings
         return jax.device_put(cache, cache_shardings(cache, self.mesh))
 
-    def _record_wave(self, n_real: int):
-        """Per-device slot utilization of one wave: device d owns slots
-        [d*b_loc, (d+1)*b_loc); real (unpadded) slots fill from 0."""
-        b_loc = self.batch // self._dp
-        per_dev = [min(max(n_real - d * b_loc, 0), b_loc) / b_loc
-                   for d in range(self._dp)]
-        self.wave_stats.append({"n_real": n_real, "batch": self.batch,
-                                "per_device": per_dev})
-
-    def utilization_report(self) -> dict:
-        """Aggregate per-device slot utilization across the waves served
-        so far — the fig. 9 'idle cores' readout for serving: a device
-        whose slots were padding did no useful decode work."""
-        if not self.wave_stats:
-            return {"devices": self._dp, "waves": 0, "mean_util": 0.0,
-                    "per_device": [0.0] * self._dp}
-        per_dev = [float(np.mean([w["per_device"][d]
-                                  for w in self.wave_stats]))
-                   for d in range(self._dp)]
-        return {"devices": self._dp, "waves": len(self.wave_stats),
-                "mean_util": float(np.mean(per_dev)),
-                "per_device": per_dev}
-
     # -------------------------------------------------- serving ----
 
     def _prefill_scored(self, prompts):
@@ -203,3 +210,69 @@ class Engine:
             # and the final truncation could drop real requests behind them
             done.extend(wave[:n_real])
         return done
+
+
+class VisionEngine(_WaveStats):
+    """Batched quantized-CNN serving over fixed-size image waves.
+
+    The CNN analogue of `Engine`: requests are images, a wave is a
+    ``batch_size`` slab of them, and with ``mesh=`` every conv/linear in
+    the net runs cluster-parallel (`repro.kernels.api` sharded entry
+    points) with the wave's batch dim data-parallel over ``dp_axis`` —
+    one mesh device ↔ one cluster core chewing its slice of the image
+    batch. The last ragged wave is padded to the full batch (pads never
+    reach results) and per-wave per-device real-slot utilization is
+    recorded exactly like the LM engine's.
+    """
+
+    def __init__(self, qnet, batch_size: int, mesh=None,
+                 dp_axis: str = "data", backend: Optional[str] = None):
+        from repro.vision.models import forward_int
+
+        self.qnet = qnet
+        self.batch = batch_size
+        self.mesh = mesh
+        self.dp_axis = dp_axis
+        self.backend = backend
+        self.wave_stats: List[dict] = []
+        if mesh is not None:
+            from repro.parallel.sharding import cluster_axis_size
+            self._dp = cluster_axis_size(mesh, dp_axis)
+            if batch_size % self._dp != 0:
+                raise ValueError(
+                    f"batch_size={batch_size} must be divisible by mesh "
+                    f"axis {dp_axis!r} size {self._dp} so each device "
+                    "owns whole image slots")
+        else:
+            self._dp = 1
+        self._forward = jax.jit(
+            lambda xh: forward_int(qnet, xh, backend=backend, mesh=mesh))
+
+    def artifact_bytes(self) -> int:
+        from repro.vision.models import vision_artifact_bytes
+        return vision_artifact_bytes(self.qnet)
+
+    def kernel_backends(self) -> dict:
+        from repro.kernels import api
+        return {op: api.default_backend(op) for op in api.OPS}
+
+    def run(self, images) -> np.ndarray:
+        """Real images (M, H, W, C) -> int32 logits (M, classes), served
+        in mesh-sharded waves. Dequantize with ``qnet.eps_logits``."""
+        from repro.vision.models import quantize_input
+
+        images = np.asarray(images, np.float32)
+        x_hat = np.asarray(quantize_input(self.qnet, images))
+        outs = []
+        for start in range(0, len(images), self.batch):
+            wave = x_hat[start:start + self.batch]
+            n_real = len(wave)
+            self._record_wave(n_real)
+            if n_real < self.batch:  # pad the last wave; pads sliced off
+                pad = np.zeros((self.batch - n_real, *wave.shape[1:]),
+                               wave.dtype)
+                wave = np.concatenate([wave, pad], axis=0)
+            logits = self._forward(jnp.asarray(wave))
+            outs.append(np.asarray(logits)[:n_real])
+        return (np.concatenate(outs, axis=0) if outs
+                else np.zeros((0, self.qnet.cfg.num_classes), np.int32))

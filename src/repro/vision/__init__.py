@@ -1,0 +1,25 @@
+"""repro.vision — end-to-end quantized CNN subsystem (paper §VI networks).
+
+The paper's headline results are network-level: QNN conv layers composed
+into full CNNs on the cluster. This package is that layer of the repro:
+
+* `layers`  — the PULP-NN layer set as quantized TPU layers (conv,
+  depthwise conv, linear, max/avg pooling, residual add) with the
+  eq. 3/4 requantization epilogue at every layer boundary, all routed
+  through the `repro.kernels.api` backend registry;
+* `models`  — a graph interpreter + two paper-class networks
+  (MobileNetV1-style depthwise-separable, MLPerf-Tiny-style ResNet-8)
+  with per-path param labels so the `repro.deploy` calibrate -> plan ->
+  pack flow drives per-layer W{8,4,2} plans through real CNNs;
+* `configs` — named network configs (full + smoke variants).
+"""
+
+from repro.vision.layers import (QConv2D, QDepthwiseConv2D, QLinear,
+                                 QMaxPool2D, QAvgPool2D, QResidualAdd,
+                                 conv_tap, fold_add_requant,
+                                 fold_avgpool_requant, quantize_depthwise)
+from repro.vision.models import (LayerDef, VisionConfig, QuantizedVisionNet,
+                                 collect_absmax, init_fp, forward_fp,
+                                 forward_int, quantize_net, quantize_input,
+                                 trace_shapes, vision_artifact_bytes)
+from repro.vision.configs import get_vision_config, VISION_CONFIGS

@@ -1,0 +1,400 @@
+"""Quantized vision layers — the PULP-NN layer set on the backend registry.
+
+PULP-NN (Garofalo et al., the paper's software substrate) defines the
+layer set a QNN inference library needs: convolution, depthwise
+convolution, pooling, elementwise add, and fully-connected, every one with
+the fused requantization epilogue (eqs. 3/4) at its output so activations
+stay *integer images* end to end — uint{8,4,2} tensors between layers,
+int32 accumulation inside. This module is that layer set for the TPU
+repro, each compute layer routed through `repro.kernels.api`:
+
+  QConv2D            one `api.qconv` call (fused Pallas kernel or XLA
+                     im2col, per the registry's backend resolution)
+  QDepthwiseConv2D   grouped conv lowered *above* the registry: either
+                     per-group `api.qconv` calls (cin=1, cout=1 standard
+                     convs — admitted when a fused backend supports the
+                     per-group shape) or one block-diagonal im2col +
+                     `api.qdot` GEMM (the always-available fallback);
+                     both lowerings consume the same integer weights and
+                     the same single per-layer (kappa, lam, m, d) fold,
+                     so they are bit-exact against each other
+  QLinear            `api.qdot` (classifier head; 'raw' int32 logits)
+  QMaxPool2D         grid-preserving integer max — no requantization
+  QAvgPool2D         int32 window sum + eq. 4 requant (`requantize_shift`
+                     floor semantics, same helper as the kernel epilogue)
+  QResidualAdd       two-scale integer add: y = clip((m1*a + m2*b) >> d);
+                     operands are uint{8,4,2} so every product fits int32
+                     directly (no hi/lo split needed, d may be < 16)
+
+The fp reference applies (`conv2d_fp`, ...) are the calibration-time
+forward; `conv_tap` mirrors `nn/layers.py::dense_tap` so the deploy
+calibrator can observe per-conv activations during an eager replay.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.calibration import calibrate_weight
+from repro.core.quantize import (QuantSpec, QuantizedLinearParams,
+                                 fold_bn_requant, pick_requant_md, quantize,
+                                 requantize_shift)
+from repro.kernels.qconv.ops import (QuantizedConvParams, im2col_hwc,
+                                     quantize_conv)
+
+# Calibration tap: when set, the fp conv/depthwise/linear applies call it
+# with (params_dict, x) before the op — the vision analogue of
+# `nn/layers.py::dense_tap` (host-side eager calibration passes only).
+_CONV_TAP: Optional[Callable] = None
+
+
+@contextlib.contextmanager
+def conv_tap(fn: Callable):
+    """Install ``fn(params_dict, x)`` as the vision-layer observer."""
+    global _CONV_TAP
+    prev = _CONV_TAP
+    _CONV_TAP = fn
+    try:
+        yield
+    finally:
+        _CONV_TAP = prev
+
+
+# ------------------------------------------------------- fp reference ---
+
+def conv2d_raw(x, w, *, stride: int, padding: int, groups: int = 1):
+    """Raw fp conv (no BN/ReLU): x (N,H,W,Cin) f32, w (fh,fw,Cin/g,Cout).
+
+    Shared by the fp forward and the calibrator's W{b}A8 simulation."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def conv2d_fp(p, x, *, stride: int, padding: int, relu: bool = True):
+    """fp conv + BN + ReLU; p: {"w": (fh,fw,cin,cout), "bn_scale",
+    "bn_bias"}. Calls the conv_tap observer (calibration)."""
+    if _CONV_TAP is not None:
+        _CONV_TAP(p, x)
+    y = conv2d_raw(x, p["w"], stride=stride, padding=padding)
+    y = y * p["bn_scale"] + p["bn_bias"]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def depthwise_fp(p, x, *, stride: int, padding: int, relu: bool = True):
+    """fp depthwise conv + BN + ReLU; p["w"]: (fh, fw, C)."""
+    if _CONV_TAP is not None:
+        _CONV_TAP(p, x)
+    w = p["w"]
+    c = w.shape[-1]
+    y = conv2d_raw(x, w.reshape(*w.shape[:2], 1, c), stride=stride,
+                   padding=padding, groups=c)
+    y = y * p["bn_scale"] + p["bn_bias"]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def linear_fp(p, x):
+    """fp classifier head (no BN/activation); p["w"]: (d_in, classes)."""
+    if _CONV_TAP is not None:
+        _CONV_TAP(p, x)
+    return x @ p["w"]
+
+
+def maxpool_fp(x, window: int, stride: int):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def avgpool_global_fp(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ----------------------------------------------------- requant folds ---
+
+def fold_avgpool_requant(count: int, eps_x: float, eps_y: float):
+    """(m, d) for integer average pooling over ``count`` window elements.
+
+    y_real = (1/count) * sum(x_real)  =>  y_hat = (eps_x / (eps_y*count))
+    * sum(x_hat); the requant runs through `requantize_shift` (floor
+    semantics, d >= 16 — the window sum is an int32 accumulator).
+    """
+    return pick_requant_md(float(eps_x) / (float(eps_y) * count))
+
+
+def fold_add_requant(eps_a: float, eps_b: float, eps_y: float):
+    """(m1, m2, d) for the two-scale residual add.
+
+    y_hat = clip((m1*a_hat + m2*b_hat) >> d) with m_i = round(eps_i/eps_y
+    * 2^d). Operands are uint{8,4,2} integer images (< 2^8), so m*x <
+    2^23 fits int32 without the hi/lo split — d may go below 16 (ratios
+    near 1 need d ~ 14).
+    """
+    r1 = float(eps_a) / float(eps_y)
+    r2 = float(eps_b) / float(eps_y)
+    _, d = pick_requant_md(max(r1, r2), d_min=0)
+    return (int(np.round(r1 * (1 << d))), int(np.round(r2 * (1 << d))), d)
+
+
+# -------------------------------------------------- quantized layers ---
+
+@dataclasses.dataclass(frozen=True)
+class QConv2D:
+    """One quantized conv layer: `api.qconv` + fused eq. 3/4 epilogue.
+
+    ``backend`` is the plan-routed kernel backend for this layer (None ->
+    registry resolution); an explicit ``backend=`` on `apply` wins.
+    """
+
+    conv: QuantizedConvParams
+    backend: Optional[str] = None
+
+    def apply(self, x_hat, *, backend: Optional[str] = None, mesh=None):
+        from repro.kernels import api
+        return api.qconv(self.conv, x_hat,
+                         backend=backend or self.backend, mesh=mesh)
+
+
+@dataclasses.dataclass(frozen=True)
+class QDepthwiseConv2D:
+    """Depthwise conv lowered onto the registry ops (no grouped backend
+    exists — `api.qconv` rejects grouped params cleanly).
+
+    Two bit-exact lowerings from one quantization pass:
+
+    * ``qdot``: one block-diagonal im2col GEMM — K = fh*fw*C with
+      W[t*C + c, c'] = 0 unless c == c' (zero weights are zero MACs, so
+      the block-diagonal contraction *is* the depthwise conv), requant
+      epilogue per channel. One registry call; the default.
+    * ``per_group``: C standard convs (cin=1, cout=1) through
+      `api.qconv`, sharing the single per-layer (kappa, lam, m, d) fold
+      (slices, never re-folded — a per-channel re-fold would pick
+      different shifts d and break cross-lowering bit-exactness).
+
+    ``lowering='auto'`` picks per_group only when the registry resolves a
+    fused (pallas-family) backend for the per-group shape — the in-kernel
+    receptive-field gather is the only reason to pay C dispatches;
+    everywhere else the single block-diagonal GEMM wins. Under a mesh the
+    qdot route is forced (cout=1 per-group convs cannot be
+    tensor-parallel).
+    """
+
+    gemm: QuantizedLinearParams            # block-diagonal (fh*fw*C -> C)
+    per_group: Tuple[QuantizedConvParams, ...]
+    fh: int
+    fw: int
+    stride: int
+    padding: int
+    channels: int
+    backend: Optional[str] = None
+
+    def apply(self, x_hat, *, backend: Optional[str] = None, mesh=None,
+              lowering: str = "auto"):
+        from repro.kernels import api
+
+        backend = backend or self.backend
+        if lowering == "auto":
+            lowering = ("qdot" if mesh is not None
+                        else self._auto_lowering(x_hat, backend))
+        if lowering == "per_group":
+            if mesh is not None:
+                raise ValueError(
+                    "depthwise lowering 'per_group' cannot run on a mesh "
+                    "(cout=1 per-group convs have no tensor-parallel "
+                    "axis); use lowering='qdot' or 'auto'")
+            outs = [api.qconv(pg, x_hat[..., c:c + 1], backend=backend)
+                    for c, pg in enumerate(self.per_group)]
+            return jnp.concatenate(outs, axis=-1)
+        if lowering != "qdot":
+            raise ValueError(f"unknown depthwise lowering {lowering!r}; "
+                             "expected 'auto', 'qdot' or 'per_group'")
+        cols, _, _ = im2col_hwc(x_hat, self.fh, self.fw, self.stride,
+                                self.padding)
+        return api.qdot(self.gemm, cols, backend=backend, mesh=mesh)
+
+    def _auto_lowering(self, x_hat, backend) -> str:
+        from repro.kernels import api
+        if not self.per_group:
+            return "qdot"
+        shape = (x_hat.shape[0], x_hat.shape[1], x_hat.shape[2], 1,
+                 self.fh, self.fw, self.stride, self.padding, 1, 1)
+        try:
+            spec = api.resolve("qconv", shape, self.gemm.a_bits,
+                               self.gemm.w_bits, backend=backend)
+        except (KeyError, RuntimeError):
+            return "qdot"
+        return "per_group" if spec.name.startswith("pallas") else "qdot"
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinear:
+    """Quantized fully-connected head via `api.qdot`. ``epilogue='raw'``
+    keeps int32 logits (argmax-exact; dequantize with the net's
+    ``eps_logits``)."""
+
+    gemm: QuantizedLinearParams
+    epilogue: str = "raw"
+    backend: Optional[str] = None
+
+    def apply(self, x_hat, *, backend: Optional[str] = None, mesh=None):
+        from repro.kernels import api
+        return api.qdot(self.gemm, x_hat, epilogue=self.epilogue,
+                        backend=backend or self.backend, mesh=mesh)
+
+
+@dataclasses.dataclass(frozen=True)
+class QMaxPool2D:
+    """Integer max pooling — order-preserving on the uint grid, so the
+    output stays on the *input's* quantization grid: no requantization,
+    bit-exact by construction."""
+
+    window: int
+    stride: int
+
+    def apply(self, x_hat):
+        return jax.lax.reduce_window(
+            x_hat, jnp.int8(-128), jax.lax.max,
+            (1, self.window, self.window, 1),
+            (1, self.stride, self.stride, 1), "VALID")
+
+
+@dataclasses.dataclass(frozen=True)
+class QAvgPool2D:
+    """Integer average pooling: int32 window sum + eq. 4 requantization
+    (floor semantics via `requantize_shift` — the same helper the kernel
+    epilogues use, so pooling rounds exactly like every other boundary).
+    ``window == 0`` means global pooling, returning (N, C)."""
+
+    window: int
+    stride: int
+    m: int
+    d: int
+    out_bits: int
+
+    def apply(self, x_hat):
+        x32 = x_hat.astype(jnp.int32)
+        if self.window == 0:
+            s = jnp.sum(x32, axis=(1, 2))
+        else:
+            s = jax.lax.reduce_window(
+                x32, jnp.int32(0), jax.lax.add,
+                (1, self.window, self.window, 1),
+                (1, self.stride, self.stride, 1), "VALID")
+        y = requantize_shift(s, jnp.int32(self.m), self.d)
+        hi = packing.int_range(self.out_bits, False)[1]
+        return jnp.clip(y, 0, hi).astype(jnp.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QResidualAdd:
+    """Two-scale integer residual add: y = clip((m1*a + m2*b) >> d).
+
+    Operands are uint{8,4,2} images, so each product fits int32 without
+    the hi/lo split; the clip saturates onto the unsigned out_bits grid
+    (the clip-at-zero is a no-op on unsigned operands — the ReLU-after-add
+    of the fp net is inherent in the grid)."""
+
+    m1: int
+    m2: int
+    d: int
+    out_bits: int
+
+    def apply(self, a_hat, b_hat):
+        acc = (a_hat.astype(jnp.int32) * self.m1
+               + b_hat.astype(jnp.int32) * self.m2) >> self.d
+        hi = packing.int_range(self.out_bits, False)[1]
+        return jnp.clip(acc, 0, hi).astype(jnp.int8)
+
+
+# --------------------------------------------------- layer builders ---
+
+def quantize_conv_layer(p, spec_x: QuantSpec, spec_y: QuantSpec,
+                        w_bits: int, *, stride: int, padding: int,
+                        backend: Optional[str] = None) -> QConv2D:
+    """fp conv node {"w","bn_scale","bn_bias"} -> deployable QConv2D."""
+    spec_w = calibrate_weight(p["w"], w_bits)
+    conv = quantize_conv(p["w"], spec_w, p["bn_scale"], p["bn_bias"],
+                         spec_x, spec_y, stride, padding)
+    return QConv2D(conv=conv, backend=backend)
+
+
+def quantize_depthwise(p, spec_x: QuantSpec, spec_y: QuantSpec,
+                       w_bits: int, *, stride: int, padding: int,
+                       backend: Optional[str] = None) -> QDepthwiseConv2D:
+    """fp depthwise node (w: (fh, fw, C)) -> QDepthwiseConv2D with both
+    lowerings built from ONE quantization + ONE (kappa, lam, m, d) fold."""
+    w = p["w"]
+    fh, fw, c = w.shape
+    spec_w = calibrate_weight(w, w_bits)
+    w_hat = quantize(w, spec_w)                       # (fh, fw, C) int8
+    kappa, lam, m, d = fold_bn_requant(
+        spec_w.eps, spec_x.eps, spec_y.eps, p["bn_scale"], p["bn_bias"],
+        spec_y.bits)
+
+    # block-diagonal im2col GEMM: K = fh*fw*C (tap-major, matching
+    # im2col_hwc's (dy, dx, c) order), N = C; off-diagonal zeros are
+    # zero MACs, so the contraction is exactly the depthwise conv
+    taps = np.asarray(w_hat).reshape(fh * fw, c)
+    bd = np.zeros((fh * fw, c, c), np.int8)
+    bd[:, np.arange(c), np.arange(c)] = taps
+    bd = jnp.asarray(bd.reshape(fh * fw * c, c))
+    k_logical = fh * fw * c
+    w_packed = packing.pack(packing.pad_to_chunk(bd, axis=0), w_bits,
+                            axis=0)
+    gemm = QuantizedLinearParams(
+        w_packed=w_packed, w_bits=w_bits, a_bits=spec_x.bits,
+        a_signed=spec_x.signed, kappa=kappa, lam=lam, m=m, d=d,
+        out_bits=spec_y.bits, k_logical=k_logical)
+
+    # per-group artifacts: channel c as a standard (cin=1, cout=1) conv,
+    # slicing the shared fold (never re-folding — d must stay per-layer)
+    cin_pad = packing.padded_size(1)
+    per_group = []
+    for ci in range(c):
+        wc = jnp.asarray(taps[:, ci:ci + 1])          # (fh*fw, 1)
+        wp_flat = packing.pack(packing.pad_to_chunk(wc, axis=0), w_bits,
+                               axis=0)
+        w_tap = jnp.zeros((fh * fw, cin_pad, 1), jnp.int8
+                          ).at[:, 0, 0].set(wc[:, 0])
+        wp_fused = packing.pack(w_tap.reshape(fh * fw * cin_pad, 1),
+                                w_bits, axis=0)
+        g = QuantizedLinearParams(
+            w_packed=wp_flat, w_bits=w_bits, a_bits=spec_x.bits,
+            a_signed=spec_x.signed, kappa=kappa[ci:ci + 1],
+            lam=lam[ci:ci + 1], m=m[ci:ci + 1], d=d,
+            out_bits=spec_y.bits, k_logical=fh * fw)
+        per_group.append(QuantizedConvParams(
+            gemm=g, fh=fh, fw=fw, stride=stride, padding=padding,
+            cin=1, cout=1, w_packed_fused=wp_fused, cin_pad=cin_pad))
+    return QDepthwiseConv2D(
+        gemm=gemm, per_group=tuple(per_group), fh=fh, fw=fw,
+        stride=stride, padding=padding, channels=c, backend=backend)
+
+
+def quantize_linear_head(p, spec_x: QuantSpec, w_bits: int, *,
+                         backend: Optional[str] = None):
+    """fp head {"w": (d_in, classes)} -> (QLinear with raw int32 logits,
+    eps_logits). kappa/lam/m ride as identity placeholders — the 'raw'
+    epilogue never reads them, but every backend's signature does."""
+    w = p["w"]
+    spec_w = calibrate_weight(w, w_bits)
+    w_hat = quantize(w, spec_w)
+    k_logical, n = w_hat.shape
+    w_packed = packing.pack(packing.pad_to_chunk(w_hat, axis=0), w_bits,
+                            axis=0)
+    gemm = QuantizedLinearParams(
+        w_packed=w_packed, w_bits=w_bits, a_bits=spec_x.bits,
+        a_signed=spec_x.signed,
+        kappa=jnp.ones((n,), jnp.int32),
+        lam=jnp.zeros((n,), jnp.int32),
+        m=jnp.ones((n,), jnp.int32), d=16, out_bits=8,
+        k_logical=k_logical)
+    eps_logits = float(spec_w.eps) * float(spec_x.eps)
+    return QLinear(gemm=gemm, epilogue="raw", backend=backend), eps_logits

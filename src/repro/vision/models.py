@@ -1,0 +1,396 @@
+"""Vision model graphs: one LayerDef list, interpreted twice.
+
+A `VisionConfig` is an ordered tuple of `LayerDef`s — a flat dataflow
+graph with named side edges for residual skips and branch layers (the 1x1
+projection convs of ResNet downsample stages). The same graph drives:
+
+* `forward_fp`   — the float calibration forward (conv+BN+ReLU per
+  layer, `repro.vision.layers` fp applies; `edge_tap` observes every
+  layer output so calibration can place the activation grids), and
+* `forward_int`  — the deployed integer forward: uint{a_bits} integer
+  images at every boundary, int32 accumulation inside layers, the
+  eq. 3/4 requantization epilogue at each output — routed through the
+  `repro.kernels.api` registry (per-layer ``backend`` from the plan) and
+  optionally `mesh=`-sharded (images data-parallel over the cluster).
+
+`quantize_net` turns (fp params, per-edge absmax, `PrecisionPlan`) into
+the deployable `QuantizedVisionNet`: per-layer W{8,4,2} from the plan's
+fnmatch rules over the same "/"-joined param paths the deploy calibrator
+records — the CNN analogue of the LM zoo's per-dense path labels.
+
+Activation grids chain: layer i's output `QuantSpec` *is* layer i+1's
+input spec (alpha=0 unsigned grids per the paper; every conv output is
+ReLU-clipped by the unsigned requant, the PULP-NN convention). Grid-
+preserving layers (max pool) inherit their producer's spec; requantizing
+layers (conv, depthwise, avg pool, residual add) get their own
+calibrated spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import QuantSpec, quantize
+from repro.deploy.policy import PrecisionPlan, resolve_qcfg
+from repro.nn.layers import QuantConfig
+from repro.vision import layers as vl
+
+COMPUTE_KINDS = ("conv", "dwconv", "linear")     # plan-addressable layers
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDef:
+    """One graph node. ``path`` doubles as the param/plan label."""
+
+    path: str
+    kind: str                 # conv | dwconv | linear | maxpool |
+                              # avgpool_global | add
+    cout: int = 0             # conv/linear output features
+    fh: int = 3
+    fw: int = 3
+    stride: int = 1
+    padding: int = 1
+    window: int = 2           # maxpool window (stride == window)
+    input_from: Optional[str] = None   # read a saved edge, not the stream
+    save_as: Optional[str] = None      # save output under this edge name
+    branch: bool = False               # do not advance the main stream
+    skip_from: Optional[str] = None    # add: second operand edge
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    name: str
+    layers: Tuple[LayerDef, ...]
+    num_classes: int
+    in_hw: Tuple[int, int]
+    in_ch: int = 3
+    a_bits: int = 8           # activation bits at every layer boundary
+
+
+# ------------------------------------------------------------ tracing ---
+
+def trace_shapes(cfg: VisionConfig):
+    """Per-layer (in_hwc, out_hwc) walk; ``hwc = (h, w, c)``, with
+    ``h == w == 0`` once the stream is flat (post global pool)."""
+    out = []
+    stream = (*cfg.in_hw, cfg.in_ch)
+    edges: Dict[str, tuple] = {}
+    for L in cfg.layers:
+        src = edges[L.input_from] if L.input_from else stream
+        h, w, c = src
+        if L.kind == "conv":
+            oh = (h + 2 * L.padding - L.fh) // L.stride + 1
+            ow = (w + 2 * L.padding - L.fw) // L.stride + 1
+            dst = (oh, ow, L.cout)
+        elif L.kind == "dwconv":
+            oh = (h + 2 * L.padding - L.fh) // L.stride + 1
+            ow = (w + 2 * L.padding - L.fw) // L.stride + 1
+            dst = (oh, ow, c)
+        elif L.kind == "maxpool":
+            dst = ((h - L.window) // L.stride + 1,
+                   (w - L.window) // L.stride + 1, c)
+        elif L.kind == "avgpool_global":
+            dst = (0, 0, c)
+        elif L.kind == "add":
+            skip = edges[L.skip_from]
+            if skip != src:
+                raise ValueError(
+                    f"{L.path}: add operands disagree {src} vs {skip}")
+            dst = src
+        elif L.kind == "linear":
+            dst = (0, 0, L.cout)
+        else:
+            raise ValueError(f"{L.path}: unknown kind {L.kind!r}")
+        if min(dst[:2]) < 0 or (dst[0] == 0) != (dst[1] == 0):
+            raise ValueError(f"{L.path}: bad output geometry {dst}")
+        out.append({"layer": L, "in": src, "out": dst})
+        if L.save_as:
+            edges[L.save_as] = dst
+        if not L.branch:
+            stream = dst
+    return out
+
+
+# --------------------------------------------------------------- init ---
+
+def _set_path(tree: dict, path: str, node: dict):
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = node
+
+
+def get_path(tree: dict, path: str):
+    for p in path.split("/"):
+        tree = tree[p]
+    return tree
+
+
+def init_fp(cfg: VisionConfig, seed: int = 0) -> dict:
+    """He-initialized fp param tree keyed by the "/"-joined layer paths.
+
+    Conv/depthwise nodes carry {"w", "bn_scale", "bn_bias"}; the head
+    carries {"w"} only (raw logits, no BN)."""
+    rng = np.random.default_rng(seed)
+    params: dict = {}
+    for t in trace_shapes(cfg):
+        L, (h, w, c) = t["layer"], t["in"]
+        if L.kind == "conv":
+            fan_in = L.fh * L.fw * c
+            node = {
+                "w": jnp.asarray(rng.normal(
+                    size=(L.fh, L.fw, c, L.cout)).astype(np.float32)
+                    * (2.0 / fan_in) ** 0.5),
+                "bn_scale": jnp.asarray(
+                    (rng.normal(size=(L.cout,)) * 0.05 + 0.4).astype(
+                        np.float32)),
+                "bn_bias": jnp.asarray(
+                    (rng.normal(size=(L.cout,)) * 0.05).astype(np.float32)),
+            }
+        elif L.kind == "dwconv":
+            node = {
+                "w": jnp.asarray(rng.normal(
+                    size=(L.fh, L.fw, c)).astype(np.float32)
+                    * (2.0 / (L.fh * L.fw)) ** 0.5),
+                "bn_scale": jnp.asarray(
+                    (rng.normal(size=(c,)) * 0.05 + 0.4).astype(np.float32)),
+                "bn_bias": jnp.asarray(
+                    (rng.normal(size=(c,)) * 0.05).astype(np.float32)),
+            }
+        elif L.kind == "linear":
+            node = {"w": jnp.asarray(rng.normal(
+                size=(c, L.cout)).astype(np.float32) / c ** 0.5)}
+        else:
+            continue
+        _set_path(params, L.path, node)
+    return params
+
+
+# ----------------------------------------------------------- forwards ---
+
+def forward_fp(cfg: VisionConfig, params: dict, x,
+               edge_tap: Optional[Callable] = None):
+    """Float forward. ``edge_tap(path, tensor)`` observes the net input
+    (path "__input__") and every layer output — calibration places the
+    activation grids from exactly these edges."""
+    if edge_tap is not None:
+        edge_tap("__input__", x)
+    stream = x
+    edges: Dict[str, jnp.ndarray] = {}
+    for L in cfg.layers:
+        xin = edges[L.input_from] if L.input_from else stream
+        if L.kind == "conv":
+            y = vl.conv2d_fp(get_path(params, L.path), xin,
+                             stride=L.stride, padding=L.padding)
+        elif L.kind == "dwconv":
+            y = vl.depthwise_fp(get_path(params, L.path), xin,
+                                stride=L.stride, padding=L.padding)
+        elif L.kind == "maxpool":
+            y = vl.maxpool_fp(xin, L.window, L.stride)
+        elif L.kind == "avgpool_global":
+            y = vl.avgpool_global_fp(xin)
+        elif L.kind == "add":
+            y = xin + edges[L.skip_from]
+        elif L.kind == "linear":
+            y = vl.linear_fp(get_path(params, L.path), xin)
+        else:
+            raise ValueError(f"{L.path}: unknown kind {L.kind!r}")
+        if edge_tap is not None:
+            edge_tap(L.path, y)
+        if L.save_as:
+            edges[L.save_as] = y
+        if not L.branch:
+            stream = y
+    return stream
+
+
+def collect_absmax(cfg: VisionConfig, params: dict, batches) -> dict:
+    """Per-edge running absmax over fp forwards of ``batches`` — the
+    range side of calibration (the full calibrator in
+    `repro.deploy.calibrate.calibrate_vision` also prices bit-width
+    sensitivities; this is the cheap range-only pass)."""
+    absmax: Dict[str, float] = {}
+
+    def tap(path, t):
+        absmax[path] = max(absmax.get(path, 0.0),
+                           float(jnp.max(jnp.abs(t))))
+
+    for x in batches:
+        forward_fp(cfg, params, jnp.asarray(x, jnp.float32), edge_tap=tap)
+    return absmax
+
+
+# --------------------------------------------------------- quantizing ---
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedVisionNet:
+    """The deployable CNN artifact: the graph + one quantized layer per
+    node + the input grid. ``eps_logits`` dequantizes the head's raw
+    int32 logits (logits_real = eps_logits * logits_hat)."""
+
+    cfg: VisionConfig
+    qlayers: Tuple[tuple, ...]          # ((LayerDef, qlayer), ...)
+    input_spec: QuantSpec
+    eps_logits: float
+    plan: Optional[PrecisionPlan] = None
+
+    def layer_bits(self) -> Dict[str, int]:
+        """path -> w_bits for the plan-addressable layers (reporting)."""
+        out = {}
+        for L, q in self.qlayers:
+            if L.kind in ("conv", "dwconv"):
+                g = q.conv.gemm if L.kind == "conv" else q.gemm
+                out[L.path] = g.w_bits
+            elif L.kind == "linear":
+                out[L.path] = q.gemm.w_bits
+        return out
+
+
+def quantize_net(cfg: VisionConfig, fp_params: dict, absmax: dict, *,
+                 plan: Optional[PrecisionPlan] = None,
+                 default_w_bits: int = 8,
+                 backend: Optional[str] = None) -> QuantizedVisionNet:
+    """(fp params, per-edge absmax, plan) -> integer-only deployable net.
+
+    ``absmax`` maps "__input__" and every requantizing layer's path to
+    the calibrated output absmax (`collect_absmax` /
+    `deploy.calibrate.calibrate_vision`). Per-layer w_bits and kernel
+    backend come from the plan's rules (pattern over layer paths);
+    ``backend`` is the net-wide fallback route."""
+    base = QuantConfig(mode="int", w_bits=default_w_bits, a_bits=cfg.a_bits)
+
+    def out_spec(path):
+        if path not in absmax:
+            raise KeyError(
+                f"no calibrated absmax for layer {path!r}; run "
+                "collect_absmax/calibrate_vision over the same config")
+        return QuantSpec.activation(cfg.a_bits, max(absmax[path], 1e-6))
+
+    spec = QuantSpec.activation(cfg.a_bits, max(absmax["__input__"], 1e-6))
+    input_spec = spec
+    edge_specs: Dict[str, QuantSpec] = {}
+    qlayers = []
+    eps_logits = 1.0
+    for t in trace_shapes(cfg):
+        L = t["layer"]
+        spec_x = edge_specs[L.input_from] if L.input_from else spec
+        qcfg = resolve_qcfg(plan, L.path, base)
+        lyr_backend = (qcfg.backend if L.kind in COMPUTE_KINDS
+                       and qcfg.backend is not None else backend)
+        if L.kind == "conv":
+            spec_y = out_spec(L.path)
+            q = vl.quantize_conv_layer(
+                get_path(fp_params, L.path), spec_x, spec_y, qcfg.w_bits,
+                stride=L.stride, padding=L.padding, backend=lyr_backend)
+        elif L.kind == "dwconv":
+            spec_y = out_spec(L.path)
+            q = vl.quantize_depthwise(
+                get_path(fp_params, L.path), spec_x, spec_y, qcfg.w_bits,
+                stride=L.stride, padding=L.padding, backend=lyr_backend)
+        elif L.kind == "maxpool":
+            spec_y = spec_x                      # grid-preserving
+            q = vl.QMaxPool2D(window=L.window, stride=L.stride)
+        elif L.kind == "avgpool_global":
+            spec_y = out_spec(L.path)
+            h, w, _ = t["in"]
+            m, d = vl.fold_avgpool_requant(h * w, spec_x.eps, spec_y.eps)
+            q = vl.QAvgPool2D(window=0, stride=1, m=m, d=d,
+                              out_bits=cfg.a_bits)
+        elif L.kind == "add":
+            spec_b = edge_specs[L.skip_from]
+            spec_y = out_spec(L.path)
+            m1, m2, d = vl.fold_add_requant(spec_x.eps, spec_b.eps,
+                                            spec_y.eps)
+            q = vl.QResidualAdd(m1=m1, m2=m2, d=d, out_bits=cfg.a_bits)
+        elif L.kind == "linear":
+            q, eps_logits = vl.quantize_linear_head(
+                get_path(fp_params, L.path), spec_x, qcfg.w_bits,
+                backend=lyr_backend)
+            spec_y = spec_x                      # raw logits: no new grid
+        qlayers.append((L, q))
+        if L.save_as:
+            edge_specs[L.save_as] = spec_y
+        if not L.branch:
+            spec = spec_y
+    return QuantizedVisionNet(cfg=cfg, qlayers=tuple(qlayers),
+                              input_spec=input_spec,
+                              eps_logits=eps_logits, plan=plan)
+
+
+def quantize_input(qnet: QuantizedVisionNet, x):
+    """Real images (N, H, W, C) f32 -> uint{a_bits} integer images."""
+    return quantize(jnp.asarray(x, jnp.float32), qnet.input_spec)
+
+
+def forward_int(qnet: QuantizedVisionNet, x_hat, *,
+                backend: Optional[str] = None, mesh=None,
+                collect: Optional[Callable] = None):
+    """Integer-only forward: uint{a_bits} in, int32 logits out.
+
+    ``backend`` forces one kernel backend net-wide (parity tests);
+    otherwise each layer routes through its plan-assigned backend or the
+    registry default. ``mesh`` shards every conv/linear data-parallel
+    over the image batch (`qconv_sharded`/`qdot_sharded` — bit-exact vs
+    meshless by the registry's psum-free construction).
+    ``collect(path, y_hat)`` observes every integer edge (tests)."""
+    stream = x_hat
+    edges: Dict[str, jnp.ndarray] = {}
+    for L, q in qnet.qlayers:
+        xin = edges[L.input_from] if L.input_from else stream
+        if L.kind in ("conv", "dwconv", "linear"):
+            y = q.apply(xin, backend=backend, mesh=mesh)
+        elif L.kind == "add":
+            y = q.apply(xin, edges[L.skip_from])
+        else:
+            y = q.apply(xin)
+        if collect is not None:
+            collect(L.path, y)
+        if L.save_as:
+            edges[L.save_as] = y
+        if not L.branch:
+            stream = y
+    return stream
+
+
+def streamed_weight_bytes(qnet: QuantizedVisionNet) -> int:
+    """HBM bytes of the weight-side arrays one forward actually streams:
+    per compute layer, the qdot-route packed weights plus the epilogue
+    vectors. This is the memory-roofline term — unlike
+    `vision_artifact_bytes` it counts ONE depthwise lowering (the
+    block-diagonal GEMM the default route runs), not every materialized
+    layout."""
+    total = 0
+    for L, q in qnet.qlayers:
+        if L.kind == "conv":
+            g = q.conv.gemm
+        elif L.kind in ("dwconv", "linear"):
+            g = q.gemm
+        else:
+            continue
+        for arr in (g.w_packed, g.kappa, g.lam, g.m):
+            total += arr.size * arr.dtype.itemsize
+    return total
+
+
+def vision_artifact_bytes(qnet: QuantizedVisionNet) -> int:
+    """Total bytes of the packed arrays in the deployable net (both
+    depthwise lowerings' weights are materialized and both count)."""
+    seen = set()
+
+    def walk(obj) -> int:
+        if isinstance(obj, (jnp.ndarray, np.ndarray)):
+            if id(obj) in seen:
+                return 0
+            seen.add(id(obj))
+            return obj.size * obj.dtype.itemsize
+        if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+            return sum(walk(getattr(obj, f.name))
+                       for f in dataclasses.fields(obj))
+        if isinstance(obj, (tuple, list)):
+            return sum(walk(v) for v in obj)
+        return 0
+
+    return sum(walk(q) for _, q in qnet.qlayers)

@@ -127,6 +127,47 @@ def test_unknown_backend_raises_with_available_list():
         api.register("qpool", "xla", supports=lambda *a: True, run=None)
 
 
+def test_grouped_conv_rejected_cleanly(rng, monkeypatch):
+    """Grouped/depthwise params: no registered qconv backend claims
+    support, default resolution raises, and an explicit backend raises
+    (instead of silently mis-shaping the ungrouped contraction)."""
+    import dataclasses
+
+    monkeypatch.delenv(api.ENV_VAR, raising=False)
+    qp, xq = _mk_conv(rng, 8, 8)
+    grouped = dataclasses.replace(qp, groups=2)
+    shape = api._conv_shape(grouped, xq)
+    assert api.conv_shape_groups(shape) == 2
+    plat = api.platform()
+    for name in api.backends("qconv"):
+        assert not api.get("qconv", name).supports(shape, 8, 8, plat), name
+    with pytest.raises(RuntimeError, match="no default backend supports"):
+        api.qconv(grouped, xq)
+    with pytest.raises(ValueError, match="grouped conv"):
+        api.qconv(grouped, xq, backend="xla")
+    with pytest.raises(ValueError, match="grouped conv"):
+        api.qconv(grouped, xq, backend="pallas_interpret")
+    # ungrouped params still resolve exactly as before (9- and 10-tuple
+    # shape keys are both accepted by the supports helpers)
+    assert api.conv_shape_groups(shape[:9]) == 1
+    got = np.asarray(api.qconv(qp, xq, backend="xla"))
+    want = np.asarray(api.qconv(qp, xq, backend="eager_ref"))
+    assert np.array_equal(got, want)
+
+
+def test_grouped_conv_rejected_under_mesh(rng):
+    import dataclasses
+    import jax
+
+    qp, xq = _mk_conv(rng, 8, 8)
+    grouped = dataclasses.replace(qp, groups=2)
+    mesh = jax.make_mesh((2, 1), ("data", "model"),
+                         devices=jax.devices()[:2])
+    with pytest.raises((RuntimeError, ValueError),
+                       match="grouped conv|no default backend supports"):
+        api.qconv(grouped, xq, mesh=mesh, backend="xla")
+
+
 def test_default_resolution_skips_unsupported(monkeypatch):
     """supports=False backends are skipped; the capability order falls
     through to the first supporting backend."""
