@@ -28,9 +28,17 @@ def time_call(fn, *args, warmup=1, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def emit(name, us, derived="", backend=""):
+def emit(name, us, derived="", backend="", pipeline="", frac_of_peak=None):
     """`backend` names the kernel backend (repro.kernels.api) the row
-    measured, so the perf trajectory can compare backends per row."""
+    measured, so the perf trajectory can compare backends per row.
+    `pipeline` names the kernel software-pipeline mode the row ran
+    (kernels/common.PIPELINE_MODES) and `frac_of_peak` is the v5e
+    roofline fraction-of-peak-MACs column — both optional; rows that
+    carry them are the pipelined-vs-not roofline ladder (fig8)."""
     ROWS.append({"name": name, "us_per_call": round(float(us), 1),
-                 "derived": str(derived), "backend": str(backend)})
-    print(f"{name},{us:.1f},{derived},{backend}")
+                 "derived": str(derived), "backend": str(backend),
+                 "pipeline": str(pipeline),
+                 "frac_of_peak": (None if frac_of_peak is None
+                                  else round(float(frac_of_peak), 4))})
+    print(f"{name},{us:.1f},{derived},{backend},{pipeline},"
+          f"{'' if frac_of_peak is None else f'{frac_of_peak:.4f}'}")

@@ -1,10 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived,backend`` CSV rows and writes the same
-data as machine-readable JSON (``--json``, default ``BENCH_kernels.json``:
-name -> us_per_call, plus the derived annotations under "derived" and the
-kernel backend measured under "backend") so CI can archive the perf
-trajectory run over run and compare backends per row. (Block-shape
+Prints ``name,us_per_call,derived,backend,pipeline,frac_of_peak`` CSV rows
+and writes the same data as machine-readable JSON (``--json``, default
+``BENCH_kernels.json``: name -> us_per_call, plus the derived annotations
+under "derived", the kernel backend measured under "backend", the kernel
+pipeline mode under "pipeline", and the v5e roofline fraction-of-peak
+column under "frac_of_peak") so CI can archive the perf trajectory run
+over run and compare backends/pipeline modes per row. (Block-shape
 autotuning has its own CLI: ``python -m repro.kernels.tune``.)
 """
 import argparse
@@ -15,24 +17,32 @@ from benchmarks import (common, fig8_macs_per_issue, fig9_cluster_scaling,
                         table1_envelope)
 
 
+def payload_from_rows(rows) -> dict:
+    """The BENCH_kernels.json shape (pinned by benchmarks/schema.py)."""
+    return {
+        "us_per_call": {r["name"]: r["us_per_call"] for r in rows},
+        "derived": {r["name"]: r["derived"] for r in rows
+                    if r["derived"]},
+        "backend": {r["name"]: r["backend"] for r in rows
+                    if r.get("backend")},
+        "pipeline": {r["name"]: r["pipeline"] for r in rows
+                     if r.get("pipeline")},
+        "frac_of_peak": {r["name"]: r["frac_of_peak"] for r in rows
+                         if r.get("frac_of_peak") is not None},
+    }
+
+
 def main(json_path: str = "BENCH_kernels.json") -> None:
-    print("name,us_per_call,derived,backend")
+    print("name,us_per_call,derived,backend,pipeline,frac_of_peak")
     fig8_macs_per_issue.main()
     fig9_cluster_scaling.main()
     fig11_conv_layers.main()
     fig13_sota_comparison.main()
     table1_envelope.main()
     if json_path:
-        payload = {
-            "us_per_call": {r["name"]: r["us_per_call"]
-                            for r in common.ROWS},
-            "derived": {r["name"]: r["derived"] for r in common.ROWS
-                        if r["derived"]},
-            "backend": {r["name"]: r["backend"] for r in common.ROWS
-                        if r.get("backend")},
-        }
         with open(json_path, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
+            json.dump(payload_from_rows(common.ROWS), f, indent=2,
+                      sort_keys=True)
         print(f"# wrote {len(common.ROWS)} rows -> {json_path}")
 
 

@@ -1,0 +1,166 @@
+"""Checked-in schemas for the benchmark JSON artifacts.
+
+CI archives three machine-readable artifacts per run and diffs them run
+over run (the perf trajectory). Their shapes are load-bearing — a renamed
+column silently breaks the trajectory tooling — so each writer's schema
+is pinned here and validated by tests/test_bench_schema.py:
+
+  BENCH_kernels.json  benchmarks/run.py    column dicts keyed by row name
+                      (us_per_call, derived, backend, pipeline,
+                      frac_of_peak — the last two are the fig8 roofline
+                      ladder columns)
+  BENCH_cluster.json  fig9_cluster_scaling  {version, gemm, path, rows}
+  BENCH_e2e.json      e2e_networks          {version, batch, rows}
+
+Validation is dependency-free (no jsonschema): `SchemaError` carries the
+JSON-path of the first offending field.
+"""
+import json
+import numbers
+import pathlib
+
+from repro.kernels.common import PIPELINE_MODES
+
+
+class SchemaError(ValueError):
+    """An artifact field is missing, mistyped, or out of range."""
+
+
+def _fail(path, msg):
+    raise SchemaError(f"{path}: {msg}")
+
+
+def _need(d, key, types, path, check=None):
+    if key not in d:
+        _fail(path, f"missing required field {key!r}")
+    return _typed(d[key], types, f"{path}.{key}", check)
+
+
+def _typed(v, types, path, check=None):
+    # bool is an int subclass; never accept it where a number is expected
+    if isinstance(v, bool) and bool not in (types if isinstance(
+            types, tuple) else (types,)):
+        _fail(path, f"expected {types}, got bool")
+    if not isinstance(v, types):
+        _fail(path, f"expected {types}, got {type(v).__name__}")
+    if check is not None and not check(v):
+        _fail(path, f"value {v!r} out of range")
+    return v
+
+
+_NUM = numbers.Real
+
+
+# ------------------------------------------------------ BENCH_kernels ---
+
+def validate_kernels(payload) -> None:
+    """benchmarks/run.py payload: per-column dicts keyed by row name."""
+    us = _need(payload, "us_per_call", dict, "$")
+    for name, v in us.items():
+        _typed(v, _NUM, f"$.us_per_call.{name}", lambda x: x >= 0)
+    for col, types, check in (
+            ("derived", str, None),
+            ("backend", str, None),
+            ("pipeline", str, lambda v: v in PIPELINE_MODES),
+            ("frac_of_peak", _NUM, lambda v: 0.0 <= v <= 1.0)):
+        d = _need(payload, col, dict, "$")
+        for name, v in d.items():
+            if name not in us:
+                _fail(f"$.{col}.{name}", "row name not in us_per_call")
+            _typed(v, types, f"$.{col}.{name}", check)
+
+
+def validate_fig8_roofline(payload, bits=(8, 4, 2)) -> None:
+    """The fig8 acceptance shape: per bit-width, a pipelined and a
+    non-pipelined row, each carrying a frac_of_peak roofline column, with
+    the pipelined fraction >= the exposed-DMA one."""
+    validate_kernels(payload)
+    frac, pipe = payload["frac_of_peak"], payload["pipeline"]
+    for b in bits:
+        off, db = f"fig8_{b}bit_off", f"fig8_{b}bit_double_buffer"
+        for name, mode in ((off, "off"), (db, "double_buffer")):
+            if name not in payload["us_per_call"]:
+                _fail(f"$.us_per_call.{name}", "missing fig8 roofline row")
+            if pipe.get(name) != mode:
+                _fail(f"$.pipeline.{name}", f"expected {mode!r}")
+            if name not in frac:
+                _fail(f"$.frac_of_peak.{name}", "missing roofline column")
+        if frac[db] < frac[off]:
+            _fail(f"$.frac_of_peak.{db}",
+                  "pipelined roofline below the exposed-DMA one")
+
+
+# ------------------------------------------------------ BENCH_cluster ---
+
+def _rows(payload, path):
+    rows = _need(payload, "rows", list, path)
+    if not rows:
+        _fail(f"{path}.rows", "empty rows")
+    return rows
+
+
+def validate_cluster(payload) -> None:
+    """fig9_cluster_scaling payload."""
+    _need(payload, "version", int, "$", lambda v: v == 1)
+    gemm = _need(payload, "gemm", dict, "$")
+    for k in ("M", "K", "N"):
+        _need(gemm, k, int, "$.gemm", lambda v: v > 0)
+    _need(payload, "path", str, "$")
+    for i, r in enumerate(_rows(payload, "$")):
+        p = f"$.rows[{i}]"
+        _typed(r, dict, p)
+        _need(r, "name", str, p)
+        _need(r, "bits", int, p, lambda v: v in (8, 4, 2))
+        _need(r, "devices", int, p, lambda v: v >= 1)
+        _need(r, "us_per_call", _NUM, p, lambda v: v >= 0)
+        _need(r, "speedup", _NUM, p, lambda v: v > 0)
+        _need(r, "efficiency", _NUM, p, lambda v: v > 0)
+        _need(r, "per_dev_flops", _NUM, p, lambda v: v > 0)
+        _need(r, "coll_bytes", int, p, lambda v: v >= 0)
+        _need(r, "proj_us_v5e", _NUM, p, lambda v: v > 0)
+
+
+# ---------------------------------------------------------- BENCH_e2e ---
+
+def validate_e2e(payload) -> None:
+    """e2e_networks payload; per-layer rows omit the scaling columns."""
+    _need(payload, "version", int, "$", lambda v: v == 1)
+    _need(payload, "batch", int, "$", lambda v: v >= 1)
+    for i, r in enumerate(_rows(payload, "$")):
+        p = f"$.rows[{i}]"
+        _typed(r, dict, p)
+        _need(r, "name", str, p)
+        _need(r, "net", str, p)
+        _need(r, "layer", str, p)
+        _need(r, "bits", (str, int), p)
+        _need(r, "devices", int, p, lambda v: v >= 1)
+        _need(r, "us_per_call", _NUM, p, lambda v: v >= 0)
+        _need(r, "macs_per_image", int, p, lambda v: v > 0)
+        for opt, types, check in (
+                ("speedup", _NUM, lambda v: v > 0),
+                ("efficiency", _NUM, lambda v: v > 0),
+                ("bytes_streamed", int, lambda v: v > 0),
+                ("proj_us_v5e", _NUM, lambda v: v > 0)):
+            if opt in r:
+                _typed(r[opt], types, f"{p}.{opt}", check)
+
+
+# ------------------------------------------------------------ dispatch ---
+
+VALIDATORS = {
+    "BENCH_kernels.json": validate_kernels,
+    "BENCH_cluster.json": validate_cluster,
+    "BENCH_e2e.json": validate_e2e,
+}
+
+
+def validate_file(path) -> None:
+    """Validate an artifact file, dispatching on its basename."""
+    p = pathlib.Path(path)
+    try:
+        fn = VALIDATORS[p.name]
+    except KeyError:
+        raise SchemaError(
+            f"{p.name}: no schema registered (known: "
+            f"{sorted(VALIDATORS)})") from None
+    fn(json.loads(p.read_text()))

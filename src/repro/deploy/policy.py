@@ -11,12 +11,15 @@ whole depth — exactly the granularity at which packed shapes must stay
 uniform for `jax.lax.scan`.
 
 Plans are frozen/hashable (they ride inside the frozen `ModelConfig`) and
-round-trip through JSON (`save_plan`/`load_plan`). Schema v2 carries the
-``backend`` field; v1 plans (the pre-registry ``use_kernel`` boolean) load
-with a single DeprecationWarning and map True -> 'pallas_interpret',
-False -> 'xla' (the booleans were explicit path pins; the same mapping
-every shim uses) — re-save (e.g. via ``repro.launch.deploy --from-plan``)
-to upgrade the artifact.
+round-trip through JSON (`save_plan`/`load_plan`). Schema v3 adds the
+per-rule ``pipeline`` field (kernel software-pipeline mode, the Mac&Load
+knob — see `repro.kernels.common.PIPELINE_MODES`); v2 plans (``backend``
+but no ``pipeline``) load unchanged with pipeline=None (resolve at run
+time). v1 plans (the pre-registry ``use_kernel`` boolean) load with a
+single DeprecationWarning and map True -> 'pallas_interpret', False ->
+'xla' (the booleans were explicit path pins; the same mapping every shim
+uses) — re-save (e.g. via ``repro.launch.deploy --from-plan``) to upgrade
+the artifact.
 """
 from __future__ import annotations
 
@@ -27,9 +30,10 @@ import pathlib
 import warnings
 from typing import Optional, Tuple
 
+from repro.kernels.common import check_pipeline
 from repro.nn.layers import QuantConfig
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,11 +45,14 @@ class PlanRule:
     a_bits: int = 8
     backend: Optional[str] = None      # kernel backend (repro.kernels.api)
     a_absmax: Optional[float] = None   # calibrated static activation absmax
+    pipeline: Optional[str] = None     # kernel pipeline mode (Mac&Load knob)
     # DEPRECATION SHIM: pre-registry boolean; normalized to None in
     # __post_init__ after mapping onto `backend`.
     use_kernel: Optional[bool] = None
 
     def __post_init__(self):
+        if self.pipeline is not None:
+            check_pipeline(self.pipeline)
         if self.use_kernel is not None:
             if self.backend is not None:
                 raise ValueError(
@@ -90,7 +97,8 @@ class PrecisionPlan:
         return dataclasses.replace(
             base, w_bits=r.w_bits, a_bits=r.a_bits,
             backend=r.backend if r.backend is not None else base.backend,
-            a_absmax=r.a_absmax if r.a_absmax is not None else base.a_absmax)
+            a_absmax=r.a_absmax if r.a_absmax is not None else base.a_absmax,
+            pipeline=r.pipeline if r.pipeline is not None else base.pipeline)
 
     def distinct_w_bits(self) -> Tuple[int, ...]:
         return tuple(sorted({r.w_bits for r in self.rules}
@@ -106,6 +114,7 @@ class PrecisionPlan:
             "rules": [{
                 "pattern": r.pattern, "w_bits": r.w_bits, "a_bits": r.a_bits,
                 "backend": r.backend, "a_absmax": r.a_absmax,
+                "pipeline": r.pipeline,
             } for r in self.rules],
             "meta": self.meta,
         }, indent=2, sort_keys=True)
@@ -114,7 +123,7 @@ class PrecisionPlan:
     def from_json(text: str) -> "PrecisionPlan":
         d = json.loads(text)
         version = d.get("version")
-        if version not in (1, PLAN_VERSION):
+        if version not in (1, 2, PLAN_VERSION):
             raise ValueError(f"unsupported plan version {version}")
         raw_rules = d.get("rules", [])
         if version == 1 or any("use_kernel" in r for r in raw_rules):
@@ -136,6 +145,7 @@ class PrecisionPlan:
             backend=_backend(r),
             a_absmax=(None if r.get("a_absmax") is None
                       else float(r["a_absmax"])),
+            pipeline=r.get("pipeline"),   # absent in v1/v2 -> None
         ) for r in raw_rules)
         default = d.get("default", {})
         return PrecisionPlan(

@@ -28,6 +28,17 @@ Resolution order for the per-call backend: explicit ``backend=`` argument
 from the per-(shape, bits, backend) autotune cache (`repro.kernels.tune`),
 falling back to the analytic `default_block`/`conv_default_block`.
 
+**Pipeline modes (Mac&Load analogue).** The pallas-family backends take a
+``pipeline`` mode (`repro.kernels.common.PIPELINE_MODES`): ``off`` leans
+on the grid pipeliner, ``double_buffer`` issues manual two-slot DMA
+prefetch so the next K tile's (qdot) / receptive-field tap's (qconv) copy
+overlaps the current tile's unpack+dot. Resolution order: explicit
+``pipeline=`` argument (or plan hint / plan-rule field) ->
+``REPRO_QPIPELINE`` env override -> the measured autotune-cache winner
+for this (op, shape, bits, backend) -> ``off``. The ``xla`` and
+``eager_ref`` backends have no pipeline concept and ignore the mode, so
+differential tests can force one mode suite-wide.
+
 **Cluster-parallel path (paper fig. 9).** Passing ``mesh=`` to
 `qdot`/`qconv` (or calling `qdot_sharded`/`qconv_sharded` directly) runs
 the op under `shard_map` on an N-device mesh — the JAX analog of the
@@ -54,10 +65,12 @@ import numpy as np
 
 from repro.core import packing
 from repro.kernels import tune
-from repro.kernels.common import apply_epilogue, round_up
+from repro.kernels.common import (PIPELINE_MODES, apply_epilogue,
+                                  check_pipeline, round_up)
 
 OPS = ("qdot", "qconv")
 ENV_VAR = "REPRO_QBACKEND"
+ENV_PIPELINE = "REPRO_QPIPELINE"
 # capability-ordered default resolution; backends not listed here (the
 # interpreter, the numpy oracle) are only ever selected explicitly
 DEFAULT_ORDER: Tuple[str, ...] = ("pallas", "xla")
@@ -68,7 +81,7 @@ class BackendSpec:
     op: str
     name: str
     supports: Callable  # (shape, a_bits, w_bits, platform) -> bool
-    run: Callable       # (params, x, *, epilogue, scale, block) -> array
+    run: Callable       # (params, x, *, epilogue, scale, block, pipeline)
     doc: str = ""
 
 
@@ -218,15 +231,28 @@ def _pad_axis(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def _merge_hints(backend, block, plan_hints):
+def _merge_hints(backend, block, pipeline, plan_hints):
     if plan_hints:
         backend = backend or plan_hints.get("backend")
         block = block or plan_hints.get("block")
-    return backend, block
+        pipeline = pipeline or plan_hints.get("pipeline")
+    return backend, block, pipeline
+
+
+def _resolve_pipeline(pipeline: Optional[str], op: str, shape,
+                      a_bits: int, w_bits: int, backend: str) -> str:
+    """Pipeline-mode resolution: explicit arg/plan hint ->
+    ``REPRO_QPIPELINE`` env -> measured autotune-cache winner -> 'off'."""
+    if pipeline is None:
+        pipeline = os.environ.get(ENV_PIPELINE) or None
+    if pipeline is None:
+        pipeline = tune.get_pipeline(op, shape, a_bits, w_bits, backend)
+    return check_pipeline(pipeline or "off")
 
 
 def qdot(params, x_hat, *, epilogue: str = "int", scale=1.0,
          backend: Optional[str] = None, block: Optional[tuple] = None,
+         pipeline: Optional[str] = None,
          plan_hints: Optional[dict] = None, mesh=None,
          dp_axis: str = "data", tp_axis: str = "model"):
     """Quantized dot: integer-image activations x packed weights.
@@ -235,27 +261,31 @@ def qdot(params, x_hat, *, epilogue: str = "int", scale=1.0,
     images (unpacked); padded to CHUNK and packed on the fly. Leading dims
     are flattened for the GEMM and restored on the output. With ``mesh=``
     the call routes through `qdot_sharded` (cluster-parallel execution).
+    ``pipeline`` selects the kernel execution mode (module docstring).
     """
     if mesh is not None:
         return qdot_sharded(params, x_hat, mesh=mesh, dp_axis=dp_axis,
                             tp_axis=tp_axis, epilogue=epilogue, scale=scale,
-                            backend=backend, block=block,
+                            backend=backend, block=block, pipeline=pipeline,
                             plan_hints=plan_hints)
     x2, lead = _flatten_lead(x_hat)
     x2 = packing.pad_to_chunk(x2, axis=-1)
     xp = packing.pack(x2, params.a_bits, axis=-1)
     out = qdot_packed(params, xp, epilogue=epilogue, scale=scale,
-                      backend=backend, block=block, plan_hints=plan_hints)
+                      backend=backend, block=block, pipeline=pipeline,
+                      plan_hints=plan_hints)
     return out.reshape(*lead, out.shape[-1])
 
 
 def qdot_packed(params, x_packed, *, epilogue: str = "int", scale=1.0,
                 backend: Optional[str] = None,
                 block: Optional[tuple] = None,
+                pipeline: Optional[str] = None,
                 plan_hints: Optional[dict] = None):
     """`qdot` over already-packed activations (fused chains where the
     previous layer's epilogue emitted packed integer images)."""
-    backend, block = _merge_hints(backend, block, plan_hints)
+    backend, block, pipeline = _merge_hints(backend, block, pipeline,
+                                            plan_hints)
     m = x_packed.shape[0]
     k = x_packed.shape[1] * packing.pack_factor(params.a_bits)
     n = params.w_packed.shape[1]
@@ -264,8 +294,10 @@ def qdot_packed(params, x_packed, *, epilogue: str = "int", scale=1.0,
     if block is None:
         block = tune.get_block("qdot", (m, k, n), params.a_bits,
                                params.w_bits, spec.name)
+    pipeline = _resolve_pipeline(pipeline, "qdot", (m, k, n),
+                                 params.a_bits, params.w_bits, spec.name)
     return spec.run(params, x_packed, epilogue=epilogue, scale=scale,
-                    block=block)
+                    block=block, pipeline=pipeline)
 
 
 # ----------------------------------------------------------- qconv entry ---
@@ -302,28 +334,33 @@ def _check_grouped(params, spec, shape):
 
 def qconv(params, x_hat, *, epilogue: str = "int", scale=1.0,
           backend: Optional[str] = None, block: Optional[tuple] = None,
+          pipeline: Optional[str] = None,
           plan_hints: Optional[dict] = None, mesh=None,
           dp_axis: str = "data", tp_axis: str = "model"):
     """Quantized HWC conv: (N, H, W, Cin) int8 images -> (N, Ho, Wo, Cout).
 
     params: `QuantizedConvParams` (both weight layouts built by
     `quantize_conv`, so every backend consumes bit-identical integers).
-    With ``mesh=`` the call routes through `qconv_sharded`.
+    With ``mesh=`` the call routes through `qconv_sharded`. ``pipeline``
+    selects the kernel execution mode (module docstring).
     """
     if mesh is not None:
         return qconv_sharded(params, x_hat, mesh=mesh, dp_axis=dp_axis,
                              tp_axis=tp_axis, epilogue=epilogue, scale=scale,
-                             backend=backend, block=block,
+                             backend=backend, block=block, pipeline=pipeline,
                              plan_hints=plan_hints)
-    backend, block = _merge_hints(backend, block, plan_hints)
+    backend, block, pipeline = _merge_hints(backend, block, pipeline,
+                                            plan_hints)
     shape = _conv_shape(params, x_hat)
     g = params.gemm
     spec = resolve("qconv", shape, g.a_bits, g.w_bits, backend=backend)
     _check_grouped(params, spec, shape)
     if block is None:
         block = tune.get_block("qconv", shape, g.a_bits, g.w_bits, spec.name)
+    pipeline = _resolve_pipeline(pipeline, "qconv", shape, g.a_bits,
+                                 g.w_bits, spec.name)
     return spec.run(params, x_hat, epilogue=epilogue, scale=scale,
-                    block=block)
+                    block=block, pipeline=pipeline)
 
 
 # ------------------------------------------------ cluster-parallel path ---
@@ -352,6 +389,7 @@ def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
                  tp_axis: str = "model", epilogue: str = "int", scale=1.0,
                  backend: Optional[str] = None,
                  block: Optional[tuple] = None,
+                 pipeline: Optional[str] = None,
                  plan_hints: Optional[dict] = None):
     """`qdot` on an N-device mesh — the paper's N-core cluster (fig. 9).
 
@@ -366,7 +404,8 @@ def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     from jax.sharding import PartitionSpec as P
     from repro.parallel import sharding as shrules
 
-    backend, block = _merge_hints(backend, block, plan_hints)
+    backend, block, pipeline = _merge_hints(backend, block, pipeline,
+                                            plan_hints)
     dp, tp, dpe, tpe = _cluster_prologue(mesh, dp_axis, tp_axis)
     wspecs = shrules.packed_linear_specs(params, mesh, tp_axis=tp_axis)
 
@@ -382,6 +421,8 @@ def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     if block is None:
         block = tune.get_block("qdot", (m_loc, k_pad, n_loc), params.a_bits,
                                params.w_bits, spec.name)
+    pipeline = _resolve_pipeline(pipeline, "qdot", (m_loc, k_pad, n_loc),
+                                 params.a_bits, params.w_bits, spec.name)
     per_n = np.ndim(scale) == 1  # per-channel dequant scale shards with N
     sc = jnp.asarray(scale)
 
@@ -390,7 +431,8 @@ def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
                                     lam=lam, m=mm)
         xp = packing.pack(packing.pad_to_chunk(xs, axis=-1),
                           params.a_bits, axis=-1)
-        return spec.run(p_loc, xp, epilogue=epilogue, scale=s, block=block)
+        return spec.run(p_loc, xp, epilogue=epilogue, scale=s, block=block,
+                        pipeline=pipeline)
 
     out = shard_map(
         local, mesh=mesh,
@@ -406,6 +448,7 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
                   tp_axis: str = "model", epilogue: str = "int", scale=1.0,
                   backend: Optional[str] = None,
                   block: Optional[tuple] = None,
+                  pipeline: Optional[str] = None,
                   plan_hints: Optional[dict] = None):
     """`qconv` on an N-device mesh: images data-parallel over the batch
     dim (padded to a ``dp`` multiple, sliced back), both packed weight
@@ -417,7 +460,8 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     from jax.sharding import PartitionSpec as P
     from repro.parallel import sharding as shrules
 
-    backend, block = _merge_hints(backend, block, plan_hints)
+    backend, block, pipeline = _merge_hints(backend, block, pipeline,
+                                            plan_hints)
     dp, tp, dpe, tpe = _cluster_prologue(mesh, dp_axis, tp_axis)
     wspecs = shrules.packed_conv_specs(params, mesh, tp_axis=tp_axis)
 
@@ -434,6 +478,8 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     if block is None:
         block = tune.get_block("qconv", shape_loc, g.a_bits, g.w_bits,
                                spec.name)
+    pipeline = _resolve_pipeline(pipeline, "qconv", shape_loc, g.a_bits,
+                                 g.w_bits, spec.name)
     per_n = np.ndim(scale) == 1
     sc = jnp.asarray(scale)
 
@@ -442,7 +488,8 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
                                     m=mm)
         p_loc = dataclasses.replace(params, gemm=g_loc, w_packed_fused=wpf,
                                     cout=cout_loc)
-        return spec.run(p_loc, xs, epilogue=epilogue, scale=s, block=block)
+        return spec.run(p_loc, xs, epilogue=epilogue, scale=s, block=block,
+                        pipeline=pipeline)
 
     out = shard_map(
         local, mesh=mesh,
@@ -467,7 +514,7 @@ def _require_tpu(name: str):
 
 
 def _qdot_pallas(params, x_packed, *, epilogue, scale, block,
-                 interpret: bool):
+                 pipeline: str, interpret: bool):
     """Pad M/N to the block multiples the kernel picks, run the Pallas
     packed GEMM, slice back."""
     from repro.kernels.qmatmul.kernel import default_block, qmatmul_packed
@@ -487,23 +534,26 @@ def _qdot_pallas(params, x_packed, *, epilogue, scale, block,
         xp, wp, kappa, lam, mm, a_bits=params.a_bits,
         a_signed=params.a_signed, w_bits=params.w_bits, d=params.d,
         out_bits=params.out_bits, epilogue=epilogue, scale=scale,
-        block=(bm, bn, bk), interpret=interpret)
+        block=(bm, bn, bk), pipeline=pipeline, interpret=interpret)
     return out[:m, :n]
 
 
-def _qdot_pallas_run(params, x_packed, *, epilogue, scale, block=None):
+def _qdot_pallas_run(params, x_packed, *, epilogue, scale, block=None,
+                     pipeline: str = "off"):
     _require_tpu("pallas")
     return _qdot_pallas(params, x_packed, epilogue=epilogue, scale=scale,
-                        block=block, interpret=False)
+                        block=block, pipeline=pipeline, interpret=False)
 
 
-def _qdot_interpret_run(params, x_packed, *, epilogue, scale, block=None):
+def _qdot_interpret_run(params, x_packed, *, epilogue, scale, block=None,
+                        pipeline: str = "off"):
     return _qdot_pallas(params, x_packed, epilogue=epilogue, scale=scale,
-                        block=block, interpret=True)
+                        block=block, pipeline=pipeline, interpret=True)
 
 
-def _qdot_xla_run(params, x_packed, *, epilogue, scale, block=None):
-    del block  # XLA picks its own tiling
+def _qdot_xla_run(params, x_packed, *, epilogue, scale, block=None,
+                  pipeline: str = "off"):
+    del block, pipeline  # XLA picks its own tiling/pipelining
     x = packing.unpack(x_packed, params.a_bits, params.a_signed, axis=-1)
     return xla_int_gemm(
         x, params.w_packed, w_bits=params.w_bits, kappa=params.kappa,
@@ -511,8 +561,9 @@ def _qdot_xla_run(params, x_packed, *, epilogue, scale, block=None):
         out_bits=params.out_bits, epilogue=epilogue, scale=scale)
 
 
-def _qdot_eager_run(params, x_packed, *, epilogue, scale, block=None):
-    del block
+def _qdot_eager_run(params, x_packed, *, epilogue, scale, block=None,
+                    pipeline: str = "off"):
+    del block, pipeline
     from repro.kernels.qmatmul.ref import qmatmul_ref
 
     if np.ndim(scale) > 0:
@@ -548,7 +599,8 @@ def _conv_fits_vmem(shape, a_bits, w_bits) -> bool:
         return False
 
 
-def _qconv_fused(params, x_hat, *, epilogue, scale, block, interpret: bool):
+def _qconv_fused(params, x_hat, *, epilogue, scale, block, pipeline: str,
+                 interpret: bool):
     from repro.kernels.qconv.kernel import qconv2d_fused
 
     g = params.gemm
@@ -558,22 +610,25 @@ def _qconv_fused(params, x_hat, *, epilogue, scale, block, interpret: bool):
         padding=params.padding, cin_pad=params.cin_pad, cout=params.cout,
         a_bits=g.a_bits, a_signed=g.a_signed, w_bits=g.w_bits, d=g.d,
         out_bits=g.out_bits, epilogue=epilogue, scale=scale, block=block,
-        interpret=interpret)
+        pipeline=pipeline, interpret=interpret)
 
 
-def _qconv_pallas_run(params, x_hat, *, epilogue, scale, block=None):
+def _qconv_pallas_run(params, x_hat, *, epilogue, scale, block=None,
+                      pipeline: str = "off"):
     _require_tpu("pallas")
     return _qconv_fused(params, x_hat, epilogue=epilogue, scale=scale,
-                        block=block, interpret=False)
+                        block=block, pipeline=pipeline, interpret=False)
 
 
-def _qconv_interpret_run(params, x_hat, *, epilogue, scale, block=None):
+def _qconv_interpret_run(params, x_hat, *, epilogue, scale, block=None,
+                         pipeline: str = "off"):
     return _qconv_fused(params, x_hat, epilogue=epilogue, scale=scale,
-                        block=block, interpret=True)
+                        block=block, pipeline=pipeline, interpret=True)
 
 
-def _qconv_xla_run(params, x_hat, *, epilogue, scale, block=None):
-    del block
+def _qconv_xla_run(params, x_hat, *, epilogue, scale, block=None,
+                   pipeline: str = "off"):
+    del block, pipeline
     from repro.kernels.qconv.ops import im2col_hwc  # lazy: ops imports api
 
     cols, ho, wo = im2col_hwc(x_hat, params.fh, params.fw, params.stride,
@@ -583,8 +638,9 @@ def _qconv_xla_run(params, x_hat, *, epilogue, scale, block=None):
     return y.reshape(x_hat.shape[0], ho, wo, params.cout)
 
 
-def _qconv_eager_run(params, x_hat, *, epilogue, scale, block=None):
-    del block
+def _qconv_eager_run(params, x_hat, *, epilogue, scale, block=None,
+                     pipeline: str = "off"):
+    del block, pipeline
     from repro.kernels.qconv.ref import qconv2d_ref
     from repro.kernels.qmatmul.ref import unpack_np
 

@@ -35,6 +35,21 @@ SUBLANE_I8 = 32
 EPILOGUES = ("int", "dequant", "raw")
 EPILOGUE_DTYPES = {"int": jnp.int8, "dequant": jnp.bfloat16, "raw": jnp.int32}
 
+# Software-pipeline execution modes for the Pallas kernels — the Mac&Load
+# analogue knob. 'off' leans on the pallas_call grid pipeliner alone;
+# 'double_buffer' keeps the packed operands in HBM and issues manual
+# double-buffered async copies so the next K tile's (or receptive-field
+# tap's) DMA overlaps the current tile's unpack+dot explicitly.
+PIPELINE_MODES = ("off", "double_buffer")
+
+
+def check_pipeline(mode: str) -> str:
+    if mode not in PIPELINE_MODES:
+        raise ValueError(
+            f"unknown pipeline mode {mode!r}; expected one of "
+            f"{PIPELINE_MODES}")
+    return mode
+
 # jax 0.4.x names the TPU compiler-params struct TPUCompilerParams; newer
 # releases renamed it CompilerParams. Resolve once here so every kernel
 # works against either.
@@ -121,12 +136,36 @@ def apply_epilogue(acc, kappa, lam, m_mul, *, d: int, out_bits: int,
     return acc.astype(out_dtype)  # 'raw'
 
 
+def gemm_working_set(bm, bn, bk, a_bits, w_bits) -> int:
+    """VMEM bytes a (bm, bn, bk) GEMM tile needs with every copy
+    double-buffered.
+
+    Counts 2x residency for *all* pipelined blocks — the packed activation
+    and weight K tiles (grid pipeliner in 'off' mode, the manual DMA slots
+    in 'double_buffer' mode: same two-buffer footprint either way), the
+    output tile, and the three epilogue-parameter blocks — plus the
+    single int32 accumulator scratch that persists across K steps. The
+    pre-fix check under-counted (single-buffered out block, no epilogue
+    params), so an autotuned pipelined tile at the budget edge could
+    overflow VMEM.
+    """
+    pf_a, pf_w = packing.pack_factor(a_bits), packing.pack_factor(w_bits)
+    x_b = bm * (bk // pf_a)
+    w_b = (bk // pf_w) * bn
+    params = 3 * bn * 4                # kappa/lam/m blocks
+    out = bm * bn * 4                  # out tile (<= int32)
+    acc = bm * bn * 4                  # int32 accumulator scratch
+    return 2 * (x_b + w_b + params + out) + acc
+
+
 def default_block(m, n, k, a_bits, w_bits,
                   vmem_budget: int = 8 * 1024 * 1024):
     """Pick GEMM (bm, bn, bk): MXU-aligned, chunk-aligned, VMEM-bounded.
 
     The paper's 4x2 -> 4x4 register-tiling exploration becomes this block
-    shape selection; benchmarks/fig8 measures the ladder.
+    shape selection; benchmarks/fig8 measures the ladder. The fit check
+    (`gemm_working_set`) counts both buffers of every double-buffered
+    copy, so the same tile is safe in either pipeline mode.
     """
     def align(v, unit):
         return max(unit, (v // unit) * unit)
@@ -134,13 +173,9 @@ def default_block(m, n, k, a_bits, w_bits,
     bm = align(min(m, 256), SUBLANE_I8)
     bn = align(min(n, 512), LANE)
     bk = align(min(k, 1024), packing.CHUNK)
-    pf_a, pf_w = packing.pack_factor(a_bits), packing.pack_factor(w_bits)
 
     def fits(bm, bn, bk):
-        x_b = bm * (bk // pf_a)
-        w_b = (bk // pf_w) * bn
-        io = bm * bn * 4 * 2  # acc scratch + out block
-        return 2 * (x_b + w_b) + io <= vmem_budget
+        return gemm_working_set(bm, bn, bk, a_bits, w_bits) <= vmem_budget
 
     while not fits(bm, bn, bk) and bk > packing.CHUNK:
         bk //= 2

@@ -20,6 +20,15 @@ Because the gather happens between pipelined MXU invocations of adjacent
 grid steps, the Pallas grid pipeliner overlaps it with compute exactly the
 way Mac&Load hides the pointer-walk loads of the RISC-V core.
 
+``pipeline='double_buffer'`` makes that overlap explicit *inside* one grid
+step (the Mac&Load analogue at tap granularity): the packed image stays in
+HBM, the kernel owns two VMEM patch slots, and while tap t's per-tap
+partial dot runs on the MXU, tap t+1's receptive-field patch DMA is
+already in flight. The contraction becomes a sum of per-tap partial dots
+— integer accumulation is order-invariant, so the result is bit-exact
+against the one-pass 'off' mode and the eager oracle
+(tests/test_kernel_pipeline.py).
+
 Layout: the implicit GEMM is (N*Ho*Wo, fh*fw*Cin_pad) @ (fh*fw*Cin_pad,
 Cout). Cin is padded per-tap to a CHUNK multiple so every tap's channel
 run is chunk-planar packable on its own (zero padding == zero MACs); the
@@ -47,8 +56,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packing
 from repro.kernels.common import (EPILOGUE_DTYPES, apply_epilogue,
-                                  compiler_params, conv_default_block,
-                                  matmul_planes, round_up)
+                                  check_pipeline, compiler_params,
+                                  conv_default_block, matmul_planes,
+                                  round_up)
 
 
 def _qconv_kernel(x_ref, w_ref, kappa_ref, lam_ref, m_ref, o_ref, col_ref,
@@ -95,6 +105,53 @@ def _qconv_kernel(x_ref, w_ref, kappa_ref, lam_ref, m_ref, o_ref, col_ref,
     o_ref[...] = y.reshape(bho, wo, -1)
 
 
+def _qconv_kernel_db(x_hbm, w_ref, kappa_ref, lam_ref, m_ref, o_ref,
+                     buf, sems, *, fh: int, fw: int, stride: int, bho: int,
+                     wo: int, cp: int, kpt: int, a_bits: int,
+                     a_signed: bool, w_bits: int, d: int, out_bits: int,
+                     epilogue: str, scale: float):
+    """Double-buffered tap gather: per filter tap, the next tap's patch
+    DMA overlaps the current tap's partial sub-byte dot.
+
+    x_hbm: (N, Hp, Wp, cp) whole packed image, resident in HBM.
+    buf:   (2, rows_span, cols_span, cp) int8 patch slots.
+    kpt:   packed weight rows per tap (cin_pad / pf_w); tap t's panel rows
+           are w_ref[t*kpt:(t+1)*kpt] (tap-major K, static slices).
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    r0 = i * bho * stride
+    rows_span = (bho - 1) * stride + 1
+    cols_span = (wo - 1) * stride + 1
+    taps = fh * fw
+
+    def tap_dma(slot, t):
+        dy, dx = divmod(t, fw)
+        return pltpu.make_async_copy(
+            x_hbm.at[b, pl.dslice(r0 + dy, rows_span),
+                     pl.dslice(dx, cols_span), slice(None)],
+            buf.at[slot], sems.at[slot])
+
+    tap_dma(0, 0).start()
+    acc = jnp.zeros((bho * wo, o_ref.shape[-1]), jnp.int32)
+    # static Python loop: taps are compile-time, so slot indices and the
+    # per-tap weight-panel slices stay static while the DMA of tap t+1
+    # rides behind tap t's MXU contraction
+    for t in range(taps):
+        if t + 1 < taps:
+            tap_dma((t + 1) % 2, t + 1).start()
+        tap_dma(t % 2, t).wait()
+        patch = buf[t % 2][::stride, ::stride]          # (bho, wo, cp)
+        acc += matmul_planes(patch.reshape(bho * wo, cp),
+                             w_ref[t * kpt:(t + 1) * kpt, :],
+                             a_bits, a_signed, w_bits)
+    y = apply_epilogue(
+        acc, kappa_ref[...], lam_ref[...], m_ref[...],
+        d=d, out_bits=out_bits, epilogue=epilogue, scale=scale,
+        out_dtype=o_ref.dtype)
+    o_ref[...] = y.reshape(bho, wo, -1)
+
+
 def qconv2d_fused(x_hat, w_packed_fused, kappa, lam, m_mul, *,
                   fh: int, fw: int, stride: int, padding: int,
                   cin_pad: int, cout: int,
@@ -103,6 +160,7 @@ def qconv2d_fused(x_hat, w_packed_fused, kappa, lam, m_mul, *,
                   scale: float = 1.0,
                   block: Optional[tuple] = None,
                   out_dtype=None,
+                  pipeline: str = "off",
                   interpret: bool = False):
     """Fused implicit-GEMM conv on integer images.
 
@@ -110,8 +168,13 @@ def qconv2d_fused(x_hat, w_packed_fused, kappa, lam, m_mul, *,
     channel padding plus sub-byte packing happen here; the Pallas kernel
     sees only the packed image. w_packed_fused is the per-tap-padded
     packed weight panel from `quantize_conv` (K = fh*fw*cin_pad,
-    tap-major). Returns (N, Ho, Wo, Cout).
+    tap-major). ``pipeline`` selects the execution mode (module
+    docstring): 'off' gathers the whole receptive field into the im2col
+    scratch once per tile, 'double_buffer' keeps the image in HBM and
+    double-buffers the per-tap patch copies behind per-tap partial dots.
+    Returns (N, Ho, Wo, Cout).
     """
+    check_pipeline(pipeline)
     n, h, w_, cin = x_hat.shape
     assert cin <= cin_pad and cin_pad % packing.CHUNK == 0, (cin, cin_pad)
     ho = (h + 2 * padding - fh) // stride + 1
@@ -151,12 +214,44 @@ def qconv2d_fused(x_hat, w_packed_fused, kappa, lam, m_mul, *,
     if out_dtype is None:
         out_dtype = EPILOGUE_DTYPES[epilogue]
 
+    grid = (n, n_ho, cout_pad // bn)
+    if pipeline == "double_buffer":
+        rows_span = (bho - 1) * stride + 1
+        cols_span = (wo - 1) * stride + 1
+        kernel = functools.partial(
+            _qconv_kernel_db, fh=fh, fw=fw, stride=stride, bho=bho, wo=wo,
+            cp=cp, kpt=cin_pad // pf_w, a_bits=a_bits, a_signed=a_signed,
+            w_bits=w_bits, d=d, out_bits=out_bits, epilogue=epilogue,
+            scale=scale)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((kp, bn), lambda b, i, j: (0, j)),
+                pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+                pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+                pl.BlockSpec((1, bn), lambda b, i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((None, bho, wo, bn),
+                                   lambda b, i, j: (b, i, 0, j)),
+            out_shape=jax.ShapeDtypeStruct((n, ho_pad, wo, cout_pad),
+                                           out_dtype),
+            scratch_shapes=[
+                pltpu.VMEM((2, rows_span, cols_span, cp), jnp.int8),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+            compiler_params=compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(xp, wpk, kappa2, lam2, mm2)
+        return out[:, :ho, :, :cout]
+
     kernel = functools.partial(
         _qconv_kernel, fh=fh, fw=fw, stride=stride, bho=bho, wo=wo, cp=cp,
         a_bits=a_bits, a_signed=a_signed, w_bits=w_bits, d=d,
         out_bits=out_bits, epilogue=epilogue, scale=scale)
 
-    grid = (n, n_ho, cout_pad // bn)
     out = pl.pallas_call(
         kernel,
         grid=grid,

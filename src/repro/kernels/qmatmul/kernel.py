@@ -8,10 +8,25 @@ One Pallas TPU kernel implements the whole paper pipeline per output tile
     kappa*acc + lambda          (integer batch-norm, eq. 3)
     (m * .) >> d, clip          (QNT/ACT, eq. 4)  [epilogue='int']
 
-Mac&Load mapping: `pallas_call` grid pipelining double-buffers every
-HBM->VMEM block copy, so the DMA of tile k+1 overlaps the MXU work on tile k
-— VMEM scratch plays the NN-RF role and the fused load never costs an issue
-slot. OPEF -> 1 becomes "DMA fully hidden behind the MXU".
+Mac&Load mapping — two pipeline modes (``pipeline=``):
+
+  'off'            `pallas_call` grid pipelining double-buffers every
+                   HBM->VMEM block copy, so the DMA of tile k+1 overlaps
+                   the MXU work on tile k implicitly.
+  'double_buffer'  the explicit Mac&Load analogue: the packed operands
+                   stay in HBM (`memory_space=ANY`), the kernel owns two
+                   VMEM slots per operand and issues manual async copies —
+                   tile k+1's DMA starts before tile k's unpack+dot runs,
+                   exactly how the paper's fused mac&load issues the next
+                   load in the MAC's issue slot. The K grid dimension
+                   disappears (the kernel loops K itself), so one grid
+                   step owns the whole contraction.
+
+Either way VMEM scratch plays the NN-RF role and the fused load never costs
+an issue slot. OPEF -> 1 becomes "DMA fully hidden behind the MXU". Both
+modes consume identical packed operands and accumulate in the same int32
+order, so they are bit-exact against each other and the eager oracle
+(tests/test_kernel_pipeline.py is the differential harness).
 
 Tiling ("4x2 -> 4x4 MatMul layout" analogue): block sizes (bm, bn, bk) are
 chosen so the double-buffered working set fits VMEM, with bm/bn multiples of
@@ -33,8 +48,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packing
 from repro.kernels.common import (EPILOGUE_DTYPES, apply_epilogue,
-                                  compiler_params, default_block,
-                                  matmul_planes)
+                                  check_pipeline, compiler_params,
+                                  default_block, matmul_planes)
 
 # Back-compat re-exports: these lived here before the kernels/common split.
 from repro.kernels.common import (LANE, SUBLANE_I8,  # noqa: F401
@@ -62,24 +77,79 @@ def _qmatmul_kernel(x_ref, w_ref, kappa_ref, lam_ref, m_ref, o_ref, acc_ref,
             out_dtype=o_ref.dtype)
 
 
+def _qmatmul_kernel_db(x_hbm, w_hbm, kappa_ref, lam_ref, m_ref, o_ref,
+                       x_buf, w_buf, sems, acc_ref,
+                       *, nk: int, bm: int, bn: int, bka: int, bkw: int,
+                       a_bits: int, a_signed: bool, w_bits: int,
+                       d: int, out_bits: int, epilogue: str, scale: float):
+    """Double-buffered variant: x/w stay in HBM; two VMEM slots per
+    operand; the DMA of K tile kk+1 is issued before tile kk's dot runs.
+
+    x_buf: (2, bm, bka) int8 slots; w_buf: (2, bkw, bn) int8 slots;
+    sems: (2, 2) DMA semaphores ([slot, operand]).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    def x_dma(slot, kk):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.dslice(i * bm, bm), pl.dslice(kk * bka, bka)],
+            x_buf.at[slot], sems.at[slot, 0])
+
+    def w_dma(slot, kk):
+        return pltpu.make_async_copy(
+            w_hbm.at[pl.dslice(kk * bkw, bkw), pl.dslice(j * bn, bn)],
+            w_buf.at[slot], sems.at[slot, 1])
+
+    # warm-up: tile 0's copies are in flight before the loop starts
+    x_dma(0, 0).start()
+    w_dma(0, 0).start()
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(kk, carry):
+        cur = jax.lax.rem(kk, 2)
+        nxt = jax.lax.rem(kk + 1, 2)
+
+        @pl.when(kk + 1 < nk)
+        def _prefetch():        # next tile's DMA rides behind this dot
+            x_dma(nxt, kk + 1).start()
+            w_dma(nxt, kk + 1).start()
+
+        x_dma(cur, kk).wait()
+        w_dma(cur, kk).wait()
+        acc_ref[...] += matmul_planes(
+            x_buf[cur], w_buf[cur], a_bits, a_signed, w_bits)
+        return carry
+
+    jax.lax.fori_loop(0, nk, body, 0)
+    o_ref[...] = apply_epilogue(
+        acc_ref[...], kappa_ref[...], lam_ref[...], m_ref[...],
+        d=d, out_bits=out_bits, epilogue=epilogue, scale=scale,
+        out_dtype=o_ref.dtype)
+
+
 def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
                    a_bits: int, a_signed: bool, w_bits: int,
                    d: int, out_bits: int, epilogue: str = "int",
                    scale: float = 1.0,
                    block: Optional[tuple] = None,
                    out_dtype=None,
+                   pipeline: str = "off",
                    interpret: bool = False):
     """Packed GEMM: x (M, K/pf_a) @ w (K/pf_w, N) with fused epilogue.
 
     K is the padded logical contraction dim (multiple of CHUNK); both
     operands are chunk-planar packed along K (bits==8 means unpacked).
     kappa/lam/m_mul are (N,) int32 epilogue params (ignored unless
-    epilogue=='int').
+    epilogue=='int'). ``pipeline`` selects the execution mode (module
+    docstring): 'off' grids over K, 'double_buffer' loops K inside the
+    kernel with manual two-slot DMA prefetch.
 
     ``interpret`` defaults to False (real Mosaic lowering); interpreter
     runs go through the explicit ``pallas_interpret`` backend of
     `repro.kernels.api` (tests pass interpret=True directly).
     """
+    check_pipeline(pipeline)
     mdim = x.shape[0]
     pf_a, pf_w = packing.pack_factor(a_bits), packing.pack_factor(w_bits)
     k = x.shape[1] * pf_a
@@ -95,6 +165,36 @@ def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
 
     if out_dtype is None:
         out_dtype = EPILOGUE_DTYPES[epilogue]
+
+    if pipeline == "double_buffer":
+        kernel = functools.partial(
+            _qmatmul_kernel_db, nk=nk, bm=bm, bn=bn, bka=bk // pf_a,
+            bkw=bk // pf_w, a_bits=a_bits, a_signed=a_signed,
+            w_bits=w_bits, d=d, out_bits=out_bits, epilogue=epilogue,
+            scale=scale)
+        return pl.pallas_call(
+            kernel,
+            grid=(mdim // bm, n // bn),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+                pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+                pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mdim, n), out_dtype),
+            scratch_shapes=[
+                pltpu.VMEM((2, bm, bk // pf_a), jnp.int8),
+                pltpu.VMEM((2, bk // pf_w, bn), jnp.int8),
+                pltpu.SemaphoreType.DMA((2, 2)),
+                pltpu.VMEM((bm, bn), jnp.int32),
+            ],
+            compiler_params=compiler_params(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+        )(x, w_packed, kappa.reshape(1, -1), lam.reshape(1, -1),
+          m_mul.reshape(1, -1))
 
     kernel = functools.partial(
         _qmatmul_kernel, nk=nk, a_bits=a_bits, a_signed=a_signed,

@@ -1,11 +1,18 @@
-"""Per-(shape, bits, backend) block-shape autotune cache.
+"""Per-(shape, bits, backend) measured autotune cache: block shapes and
+pipeline modes.
 
 The block selectors in `kernels/common.py` (`default_block`,
 `conv_default_block`) pick safe VMEM-bounded tiles analytically. This
-module layers a measured cache on top: `repro.kernels.api` consults
-`get_block(op, shape, a_bits, w_bits, backend)` before falling back to the
-analytic default, so a shape that has been autotuned once keeps its best
-tile across runs via a small JSON artifact.
+module layers a *measured* cache on top: `repro.kernels.api` consults
+`get_block(...)` / `get_pipeline(...)` before falling back to the analytic
+default (block) and ``'off'`` (pipeline), so a shape that has been
+autotuned once keeps its best tile *and* its best Mac&Load pipeline mode
+across runs via a small JSON artifact.
+
+`autotune_qdot` / `autotune_qconv` time candidate block shapes x pipeline
+modes (`repro.kernels.common.PIPELINE_MODES`) per (shape, bits, backend)
+and persist the winner — the paper's register-tiling exploration plus its
+mac&load on/off ablation, per shape.
 
 Cache key: ``op|MxKxN|a{a_bits}w{w_bits}|backend`` (conv keys use the full
 geometry tuple). The JSON artifact is versioned and round-trips through
@@ -13,10 +20,15 @@ geometry tuple). The JSON artifact is versioned and round-trips through
 at import-free first use. CI uploads the artifact so the tuned tiles ride
 along with the perf trajectory.
 
-CLI (used by the CI parity matrix to produce the artifact):
+CLI:
 
+    # targeted qdot tune (the CI parity-matrix artifact)
     PYTHONPATH=src python -m repro.kernels.tune \
         --shapes 64x256x256,64x512x128 --bits 8x8,4x4 \
+        --backend pallas_interpret --out tune_cache.json
+
+    # full measured sweep: both ops x candidate blocks x pipeline modes
+    PYTHONPATH=src python -m repro.kernels.tune --sweep \
         --backend pallas_interpret --out tune_cache.json
 """
 from __future__ import annotations
@@ -27,12 +39,15 @@ import pathlib
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
-# v2: qconv cache keys carry the grouped-conv tail (api._conv_shape grew
-# from 9 to 10 elements), so v1 artifacts' conv entries can never match a
-# lookup again — the version bump makes stale artifacts fail loudly
-# (`load`) or skip with a warning (env preload) instead of silently
-# missing on every lookup.
-CACHE_VERSION = 2
+from repro.kernels.common import PIPELINE_MODES
+
+# v3: entries carry the measured pipeline-mode winner (and its time in us)
+# next to the block shape — v2 artifacts' bare block lists can't express
+# the pipeline decision, so the version bump makes stale artifacts fail
+# loudly (`load`) or skip with a warning (env preload) instead of silently
+# running every pipelined shape in 'off' mode.
+# (v2 had bumped v1 for the grouped-conv shape-key tail.)
+CACHE_VERSION = 3
 CACHE_ENV = "REPRO_QTUNE_CACHE"
 
 
@@ -43,23 +58,36 @@ def _key(op: str, shape: Sequence[int], a_bits: int, w_bits: int,
 
 
 class TuneCache:
-    """In-memory block cache with a versioned JSON round-trip."""
+    """In-memory measured-winner cache with a versioned JSON round-trip.
+
+    Each entry: ``{"block": [...], "pipeline": "off"|"double_buffer",
+    "us": float|None}`` — the winning tile, the winning pipeline mode,
+    and the measured time that won (None for hand-recorded entries).
+    """
 
     def __init__(self):
-        self.blocks: Dict[str, Tuple[int, ...]] = {}
+        self.entries: Dict[str, dict] = {}
 
-    def get(self, op, shape, a_bits, w_bits, backend):
-        blk = self.blocks.get(_key(op, shape, a_bits, w_bits, backend))
-        return None if blk is None else tuple(blk)
+    def get(self, op, shape, a_bits, w_bits, backend) -> Optional[dict]:
+        e = self.entries.get(_key(op, shape, a_bits, w_bits, backend))
+        return None if e is None else dict(e)
 
-    def put(self, op, shape, a_bits, w_bits, backend, block):
-        self.blocks[_key(op, shape, a_bits, w_bits, backend)] = tuple(
-            int(b) for b in block)
+    def put(self, op, shape, a_bits, w_bits, backend, block,
+            pipeline: str = "off", us: Optional[float] = None):
+        if pipeline not in PIPELINE_MODES:
+            raise ValueError(f"unknown pipeline mode {pipeline!r}")
+        self.entries[_key(op, shape, a_bits, w_bits, backend)] = {
+            "block": tuple(int(b) for b in block),
+            "pipeline": str(pipeline),
+            "us": None if us is None else round(float(us), 3),
+        }
 
     def to_json(self) -> str:
         return json.dumps({
             "version": CACHE_VERSION,
-            "blocks": {k: list(v) for k, v in sorted(self.blocks.items())},
+            "entries": {k: {"block": list(e["block"]),
+                            "pipeline": e["pipeline"], "us": e["us"]}
+                        for k, e in sorted(self.entries.items())},
         }, indent=2, sort_keys=True)
 
     @staticmethod
@@ -67,10 +95,16 @@ class TuneCache:
         d = json.loads(text)
         if d.get("version") != CACHE_VERSION:
             raise ValueError(
-                f"unsupported tune-cache version {d.get('version')}")
+                f"unsupported tune-cache version {d.get('version')} "
+                f"(expected {CACHE_VERSION}); re-run "
+                "`python -m repro.kernels.tune --sweep` to regenerate")
         c = TuneCache()
-        c.blocks = {k: tuple(int(b) for b in v)
-                    for k, v in d.get("blocks", {}).items()}
+        for k, e in d.get("entries", {}).items():
+            c.entries[k] = {
+                "block": tuple(int(b) for b in e["block"]),
+                "pipeline": str(e.get("pipeline", "off")),
+                "us": None if e.get("us") is None else float(e["us"]),
+            }
         return c
 
 
@@ -103,21 +137,36 @@ def _maybe_load_env():
             RuntimeWarning, stacklevel=2)
 
 
-def get_block(op: str, shape, a_bits: int, w_bits: int,
-              backend: str) -> Optional[Tuple[int, ...]]:
-    """Cached block for this exact (op, shape, bits, backend), or None —
-    callers fall back to the analytic selector on a miss."""
+def get_entry(op: str, shape, a_bits: int, w_bits: int,
+              backend: str) -> Optional[dict]:
+    """Full cached entry ({'block', 'pipeline', 'us'}) or None."""
     _maybe_load_env()
     return _CACHE.get(op, shape, a_bits, w_bits, backend)
 
 
+def get_block(op: str, shape, a_bits: int, w_bits: int,
+              backend: str) -> Optional[Tuple[int, ...]]:
+    """Cached block for this exact (op, shape, bits, backend), or None —
+    callers fall back to the analytic selector on a miss."""
+    e = get_entry(op, shape, a_bits, w_bits, backend)
+    return None if e is None else tuple(e["block"])
+
+
+def get_pipeline(op: str, shape, a_bits: int, w_bits: int,
+                 backend: str) -> Optional[str]:
+    """Cached measured pipeline-mode winner, or None (-> 'off' upstream)."""
+    e = get_entry(op, shape, a_bits, w_bits, backend)
+    return None if e is None else e["pipeline"]
+
+
 def record_block(op: str, shape, a_bits: int, w_bits: int, backend: str,
-                 block) -> None:
-    _CACHE.put(op, shape, a_bits, w_bits, backend, block)
+                 block, pipeline: str = "off",
+                 us: Optional[float] = None) -> None:
+    _CACHE.put(op, shape, a_bits, w_bits, backend, block, pipeline, us)
 
 
 def clear() -> None:
-    _CACHE.blocks.clear()
+    _CACHE.entries.clear()
 
 
 def save(path) -> None:
@@ -129,11 +178,13 @@ def load(path) -> TuneCache:
 
 
 def merge(other: TuneCache) -> None:
-    _CACHE.blocks.update(other.blocks)
+    """Merge ``other`` into the module cache; on a key conflict the
+    *incoming* entry wins (last merge is the freshest measurement)."""
+    _CACHE.entries.update(other.entries)
 
 
-def entries() -> Dict[str, Tuple[int, ...]]:
-    return dict(_CACHE.blocks)
+def entries() -> Dict[str, dict]:
+    return {k: dict(e) for k, e in _CACHE.entries.items()}
 
 
 # ---------------------------------------------------------------- tuning ---
@@ -167,13 +218,55 @@ def qdot_candidates(m: int, n: int, k: int, a_bits: int,
     return tuple(sorted(c for c in cands if k % c[2] == 0))
 
 
+def qconv_candidates(shape, a_bits: int,
+                     w_bits: int) -> Tuple[Tuple[int, int], ...]:
+    """(bho, bn) ladder around the analytic conv default."""
+    from repro.core import packing
+    from repro.kernels.common import LANE, conv_default_block
+
+    n, h, w, cin, fh, fw, stride, padding, cout = shape[:9]
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w + 2 * padding - fw) // stride + 1
+    bho0, bn0 = conv_default_block(n, ho, wo, cout, fh, fw,
+                                   packing.padded_size(cin), stride,
+                                   a_bits, w_bits)
+    cands = set()
+    for bho in {bho0, max(1, bho0 // 2), min(ho, bho0 * 2)}:
+        for bn in {bn0, max(LANE, bn0 // 2)}:
+            cands.add((bho, bn))
+    return tuple(sorted(cands))
+
+
+def _sweep(op: str, shape, a_bits: int, w_bits: int, backend: str,
+           run_candidate, cands, pipelines, iters: int):
+    """Time every (block x pipeline) candidate; record + return the winner
+    as (block, pipeline)."""
+    best, best_t = None, float("inf")
+    for blk in cands:
+        for pipe in pipelines:
+            try:
+                t = _time(lambda b=blk, p=pipe: run_candidate(b, p),
+                          iters=iters)
+            except Exception:
+                continue                  # candidate not runnable; skip
+            if t < best_t:
+                best, best_t = (blk, pipe), t
+    if best is None:
+        raise RuntimeError(
+            f"no runnable (block, pipeline) candidate for {op} {shape}")
+    record_block(op, shape, a_bits, w_bits, backend, best[0], best[1],
+                 us=best_t * 1e6)
+    return best
+
+
 def autotune_qdot(params, x_packed, *, backend: str = "pallas_interpret",
                   epilogue: str = "int", iters: int = 2,
-                  candidates=None) -> Tuple[int, int, int]:
-    """Time candidate GEMM blocks for one packed-shape and record the best.
+                  candidates=None, pipelines=PIPELINE_MODES):
+    """Time candidate GEMM blocks x pipeline modes for one packed shape.
 
-    Returns the winning (bm, bn, bk); the result also lands in the module
-    cache so subsequent `api.qdot` calls at this shape pick it up.
+    Returns the winning ``(block, pipeline)``; the result also lands in
+    the module cache so subsequent `api.qdot` calls at this shape pick up
+    both the tile and the Mac&Load mode.
     """
     from repro.core import packing
     from repro.kernels import api
@@ -185,30 +278,95 @@ def autotune_qdot(params, x_packed, *, backend: str = "pallas_interpret",
     cands = tuple(candidates or qdot_candidates(m, n, k, params.a_bits,
                                                 params.w_bits))
     spec = api.get("qdot", backend)
-    best, best_t = None, float("inf")
-    for blk in cands:
-        try:
-            t = _time(lambda b=blk: spec.run(
-                params, x_packed, epilogue=epilogue, scale=1.0, block=b),
-                iters=iters)
-        except Exception:
-            continue                      # candidate not runnable; skip
-        if t < best_t:
-            best, best_t = blk, t
-    if best is None:
-        raise RuntimeError(f"no runnable block candidate for {shape}")
-    record_block("qdot", shape, params.a_bits, params.w_bits, backend, best)
-    return best
+    if not spec.name.startswith("pallas"):
+        pipelines = ("off",)              # mode only exists for the kernel
+    return _sweep(
+        "qdot", shape, params.a_bits, params.w_bits, backend,
+        lambda b, p: spec.run(params, x_packed, epilogue=epilogue,
+                              scale=1.0, block=b, pipeline=p),
+        cands, pipelines, iters)
+
+
+def autotune_qconv(params, x_hat, *, backend: str = "pallas_interpret",
+                   epilogue: str = "int", iters: int = 2,
+                   candidates=None, pipelines=PIPELINE_MODES):
+    """Time candidate conv tiles x pipeline modes for one image geometry.
+
+    Returns the winning ``((bho, bn), pipeline)`` and records it under the
+    same shape key `api.qconv` looks up.
+    """
+    from repro.kernels import api
+
+    g = params.gemm
+    shape = (x_hat.shape[0], x_hat.shape[1], x_hat.shape[2], x_hat.shape[3],
+             params.fh, params.fw, params.stride, params.padding,
+             params.cout, getattr(params, "groups", 1))
+    cands = tuple(candidates or qconv_candidates(shape, g.a_bits, g.w_bits))
+    spec = api.get("qconv", backend)
+    if not spec.name.startswith("pallas"):
+        pipelines = ("off",)
+    return _sweep(
+        "qconv", shape, g.a_bits, g.w_bits, backend,
+        lambda b, p: spec.run(params, x_hat, epilogue=epilogue,
+                              scale=1.0, block=b, pipeline=p),
+        cands, pipelines, iters)
+
+
+# ------------------------------------------------------------------- CLI ---
+
+def _mk_qdot_artifact(rng, m, k, n, ab, wb):
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import packing
+    from repro.core.quantize import QuantizedLinearParams
+
+    lo, hi = packing.int_range(ab, False)
+    xp = packing.pack(jnp.asarray(rng.integers(
+        lo, hi + 1, size=(m, k)).astype(np.int8)), ab, axis=-1)
+    lo, hi = packing.int_range(wb, True)
+    wp = packing.pack(jnp.asarray(rng.integers(
+        lo, hi + 1, size=(k, n)).astype(np.int8)), wb, axis=0)
+    params = QuantizedLinearParams(
+        w_packed=wp, w_bits=wb, a_bits=ab, a_signed=False,
+        kappa=jnp.ones((n,), jnp.int32),
+        lam=jnp.zeros((n,), jnp.int32),
+        m=jnp.full((n,), 1 << 14, jnp.int32), d=20, out_bits=8,
+        k_logical=k)
+    return params, xp
+
+
+def _mk_qconv_artifact(rng, h, w, cin, cout, fh, fw, stride, padding,
+                       ab, wb):
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import packing
+    from repro.core.quantize import QuantSpec
+    from repro.kernels.qconv.ops import quantize_conv
+
+    wgt = (rng.normal(size=(fh, fw, cin, cout)) * 0.2).astype(np.float32)
+    params = quantize_conv(
+        jnp.asarray(wgt), QuantSpec.weight(wb, 0.6),
+        jnp.ones((cout,), np.float32), jnp.zeros((cout,), np.float32),
+        QuantSpec.activation(ab, 2.0), QuantSpec.activation(ab, 2.0),
+        stride=stride, padding=padding)
+    lo, hi = packing.int_range(ab, False)
+    x = jnp.asarray(rng.integers(lo, hi + 1,
+                                 size=(1, h, w, cin)).astype(np.int8))
+    return params, x
+
+
+# the paper's fig.11 conv geometries (16x16 / 32x32 IoT layers)
+SWEEP_CONV_SHAPES = ((16, 16, 16, 64, 3, 3, 1, 1),
+                     (32, 32, 16, 32, 3, 3, 1, 1))
+SWEEP_GEMM_SHAPES = ((64, 256, 256), (64, 512, 128), (256, 4608, 256))
 
 
 def main():
     import argparse
 
     import numpy as np
-    import jax.numpy as jnp
-
-    from repro.core import packing
-    from repro.core.quantize import QuantizedLinearParams
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--shapes", default="64x256x256",
@@ -218,28 +376,40 @@ def main():
     ap.add_argument("--backend", default="pallas_interpret")
     ap.add_argument("--iters", type=int, default=2)
     ap.add_argument("--out", default="tune_cache.json")
+    ap.add_argument("--sweep", action="store_true",
+                    help="full measured sweep: both ops (qdot over "
+                         "--shapes plus the built-in ladder, qconv over "
+                         "the paper's fig.11 geometries) x candidate "
+                         "blocks x pipeline modes")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    for sh in args.shapes.split(","):
-        m, k, n = (int(v) for v in sh.split("x"))
-        for pair in args.bits.split(","):
-            ab, wb = (int(v) for v in pair.split("x"))
-            lo, hi = packing.int_range(ab, False)
-            xp = packing.pack(jnp.asarray(rng.integers(
-                lo, hi + 1, size=(m, k)).astype(np.int8)), ab, axis=-1)
-            lo, hi = packing.int_range(wb, True)
-            wp = packing.pack(jnp.asarray(rng.integers(
-                lo, hi + 1, size=(k, n)).astype(np.int8)), wb, axis=0)
-            params = QuantizedLinearParams(
-                w_packed=wp, w_bits=wb, a_bits=ab, a_signed=False,
-                kappa=jnp.ones((n,), jnp.int32),
-                lam=jnp.zeros((n,), jnp.int32),
-                m=jnp.full((n,), 1 << 14, jnp.int32), d=20, out_bits=8,
-                k_logical=k)
-            blk = autotune_qdot(params, xp, backend=args.backend,
-                                iters=args.iters)
-            print(f"qdot {m}x{k}x{n} A{ab}W{wb} [{args.backend}] -> {blk}")
+    bit_pairs = [tuple(int(v) for v in pair.split("x"))
+                 for pair in args.bits.split(",")]
+    gemm_shapes = [tuple(int(v) for v in sh.split("x"))
+                   for sh in args.shapes.split(",")]
+    if args.sweep:
+        gemm_shapes = sorted(set(gemm_shapes) | set(SWEEP_GEMM_SHAPES))
+
+    for m, k, n in gemm_shapes:
+        for ab, wb in bit_pairs:
+            params, xp = _mk_qdot_artifact(rng, m, k, n, ab, wb)
+            blk, pipe = autotune_qdot(params, xp, backend=args.backend,
+                                      iters=args.iters)
+            print(f"qdot {m}x{k}x{n} A{ab}W{wb} [{args.backend}] "
+                  f"-> {blk} pipeline={pipe}")
+
+    if args.sweep:
+        for h, w, cin, cout, fh, fw, stride, padding in SWEEP_CONV_SHAPES:
+            for ab, wb in bit_pairs:
+                params, x = _mk_qconv_artifact(
+                    rng, h, w, cin, cout, fh, fw, stride, padding, ab, wb)
+                blk, pipe = autotune_qconv(params, x, backend=args.backend,
+                                           iters=args.iters)
+                print(f"qconv {h}x{w}x{cin}->{cout} {fh}x{fw}s{stride} "
+                      f"A{ab}W{wb} [{args.backend}] -> {blk} "
+                      f"pipeline={pipe}")
+
     save(args.out)
     print(f"tune cache ({len(entries())} entries) -> {args.out}")
 

@@ -36,12 +36,21 @@ class QuantConfig:
     # shared `xla` implementation (the production lowering) — the field is
     # carried through deployment plans for call sites that route kernels.
     backend: Optional[str] = None
+    # kernel software-pipeline mode ('off' | 'double_buffer', the Mac&Load
+    # knob — repro.kernels.common.PIPELINE_MODES); None -> runtime
+    # resolution (REPRO_QPIPELINE env -> tune-cache winner -> 'off').
+    # Like `backend`, honored by call sites routing through the op
+    # registry and carried through deployment plans (PlanRule.pipeline).
+    pipeline: Optional[str] = None
     # DEPRECATION SHIM: pre-registry boolean. Normalized to None in
     # __post_init__ after mapping True -> 'pallas_interpret' (the old
     # default silently ran interpret mode), False -> 'xla'.
     use_kernel: Optional[bool] = None
 
     def __post_init__(self):
+        if self.pipeline is not None:
+            from repro.kernels.common import check_pipeline
+            check_pipeline(self.pipeline)
         if self.use_kernel is not None:
             if self.backend is not None:
                 raise ValueError(

@@ -304,11 +304,11 @@ def test_old_plan_json_single_warning_and_backend_mapping(tmp_path):
     assert by_pat["layers/mlp/*"].backend == "pallas_interpret"
     assert by_pat["layers/attn/*"].backend == "xla"  # explicit pin kept
     assert by_pat["layers/mlp/*"].w_bits == 4      # not dropped
-    # re-save upgrades the artifact: v2, backend field, no use_kernel
+    # re-save upgrades the artifact: v3, backend field, no use_kernel
     f = tmp_path / "plan.json"
     save_plan(plan, f)
     d = json.loads(f.read_text())
-    assert d["version"] == PLAN_VERSION == 2
+    assert d["version"] == PLAN_VERSION == 3
     assert all("use_kernel" not in r for r in d["rules"])
     assert d["rules"][0]["backend"] == "pallas_interpret"
     with warnings.catch_warnings():
@@ -415,9 +415,11 @@ def test_autotune_qdot_records_best_block(rng):
     try:
         params = _mk_qdot_params(rng, 4, 4)
         x2 = packing.pack(_mk_acts(rng, 4, M=32), 4, axis=-1)
-        blk = tune.autotune_qdot(params, x2, backend="pallas_interpret",
-                                 iters=1)
+        blk, pipe = tune.autotune_qdot(params, x2,
+                                       backend="pallas_interpret", iters=1)
         assert tune.get_block("qdot", (32, 256, 128), 4, 4,
                               "pallas_interpret") == blk
+        assert tune.get_pipeline("qdot", (32, 256, 128), 4, 4,
+                                 "pallas_interpret") == pipe
     finally:
         tune.clear()

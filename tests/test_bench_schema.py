@@ -1,0 +1,180 @@
+"""Benchmark-artifact schemas (benchmarks/schema.py).
+
+The perf-trajectory tooling diffs BENCH_kernels.json / BENCH_cluster.json
+/ BENCH_e2e.json run over run, so their shapes are load-bearing. This file
+pins the checked-in validators against known-good fixture payloads (the
+exact shapes the writers emit, incl. the PR's pipeline + frac_of_peak
+roofline columns) and proves every validator actually rejects the breakage
+it claims to catch. The slow test runs the real fig8 benchmark and
+validates the artifact run.py would write.
+"""
+import copy
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:  # `import benchmarks` from any rootdir
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks import schema
+from benchmarks.schema import SchemaError
+
+KERNELS_OK = {
+    "us_per_call": {"fig8_8bit_off": 171714.1,
+                    "fig8_8bit_double_buffer": 320165.3,
+                    "fig11_conv16x16_8bit_full": 1234.5},
+    "derived": {"fig8_8bit_off": "v5e_us=2.723;macs=134217728"},
+    "backend": {"fig8_8bit_off": "pallas_interpret"},
+    "pipeline": {"fig8_8bit_off": "off",
+                 "fig8_8bit_double_buffer": "double_buffer"},
+    "frac_of_peak": {"fig8_8bit_off": 0.5004,
+                     "fig8_8bit_double_buffer": 1.0},
+}
+
+CLUSTER_OK = {
+    "version": 1,
+    "gemm": {"M": 256, "K": 2048, "N": 1024},
+    "path": "repro.kernels.api.qdot_sharded",
+    "rows": [{"name": "fig9_8bit_dev2", "bits": 8, "devices": 2,
+              "us_per_call": 1813.1, "speedup": 1.91,
+              "efficiency": 0.955, "per_dev_flops": 5.4e8,
+              "coll_bytes": 0, "proj_us_v5e": 6.82}],
+}
+
+E2E_OK = {
+    "version": 1,
+    "batch": 8,
+    "rows": [
+        {"name": "e2e_resnet8_8_conv1_dev1", "net": "resnet8",
+         "layer": "conv1", "bits": "8", "devices": 1,
+         "us_per_call": 812.0, "macs_per_image": 1769472},
+        {"name": "e2e_resnet8_mixed_total_dev2", "net": "resnet8",
+         "layer": "total", "bits": "mixed", "devices": 2,
+         "us_per_call": 9120.4, "macs_per_image": 12501504,
+         "speedup": 1.8, "efficiency": 0.9, "bytes_streamed": 91032,
+         "proj_us_v5e": 4.1},
+    ],
+}
+
+
+def _mutated(payload, fn):
+    p = copy.deepcopy(payload)
+    fn(p)
+    return p
+
+
+# ------------------------------------------------------------- kernels ---
+
+def test_kernels_fixture_valid():
+    schema.validate_kernels(KERNELS_OK)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda p: p.pop("us_per_call"), "missing required field"),
+    (lambda p: p.pop("pipeline"), "missing required field 'pipeline'"),
+    (lambda p: p.pop("frac_of_peak"), "frac_of_peak"),
+    (lambda p: p["pipeline"].update(fig8_8bit_off="triple_buffer"),
+     r"\$\.pipeline\.fig8_8bit_off"),
+    (lambda p: p["frac_of_peak"].update(fig8_8bit_off=1.5),
+     "out of range"),
+    (lambda p: p["frac_of_peak"].update(ghost_row=0.5),
+     "not in us_per_call"),
+    (lambda p: p["us_per_call"].update(fig8_8bit_off="fast"),
+     "expected"),
+    (lambda p: p["us_per_call"].update(fig8_8bit_off=True), "bool"),
+])
+def test_kernels_rejects(mutate, match):
+    with pytest.raises(SchemaError, match=match):
+        schema.validate_kernels(_mutated(KERNELS_OK, mutate))
+
+
+def test_fig8_roofline_acceptance_shape():
+    """Per bit-width: an 'off' and a 'double_buffer' row, both with
+    frac_of_peak, pipelined >= exposed-DMA."""
+    schema.validate_fig8_roofline(KERNELS_OK, bits=(8,))
+    with pytest.raises(SchemaError, match="missing fig8 roofline row"):
+        schema.validate_fig8_roofline(KERNELS_OK, bits=(8, 4))
+    bad = _mutated(KERNELS_OK,
+                   lambda p: p["frac_of_peak"].update(
+                       fig8_8bit_double_buffer=0.3))
+    with pytest.raises(SchemaError, match="below the exposed-DMA"):
+        schema.validate_fig8_roofline(bad, bits=(8,))
+    nofrac = _mutated(KERNELS_OK,
+                      lambda p: p["frac_of_peak"].pop("fig8_8bit_off"))
+    with pytest.raises(SchemaError, match="missing roofline column"):
+        schema.validate_fig8_roofline(nofrac, bits=(8,))
+
+
+# ------------------------------------------------------------- cluster ---
+
+def test_cluster_fixture_valid():
+    schema.validate_cluster(CLUSTER_OK)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda p: p.update(version=2), "out of range"),
+    (lambda p: p["gemm"].pop("K"), "missing required field 'K'"),
+    (lambda p: p.update(rows=[]), "empty rows"),
+    (lambda p: p["rows"][0].pop("speedup"), r"\$\.rows\[0\]"),
+    (lambda p: p["rows"][0].update(bits=3), "out of range"),
+    (lambda p: p["rows"][0].update(devices=0), "out of range"),
+    (lambda p: p["rows"][0].update(coll_bytes=1.5), "expected"),
+])
+def test_cluster_rejects(mutate, match):
+    with pytest.raises(SchemaError, match=match):
+        schema.validate_cluster(_mutated(CLUSTER_OK, mutate))
+
+
+# ----------------------------------------------------------------- e2e ---
+
+def test_e2e_fixture_valid():
+    schema.validate_e2e(E2E_OK)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda p: p.pop("batch"), "missing required field 'batch'"),
+    (lambda p: p["rows"][0].pop("macs_per_image"), "macs_per_image"),
+    (lambda p: p["rows"][1].update(efficiency=-1.0), "out of range"),
+    (lambda p: p["rows"][0].update(bits=None), "expected"),
+    (lambda p: p["rows"][1].update(bytes_streamed="91032"), "expected"),
+])
+def test_e2e_rejects(mutate, match):
+    with pytest.raises(SchemaError, match=match):
+        schema.validate_e2e(_mutated(E2E_OK, mutate))
+
+
+# ------------------------------------------------------------ dispatch ---
+
+def test_validate_file_dispatch(tmp_path):
+    import json
+
+    for name, payload in (("BENCH_kernels.json", KERNELS_OK),
+                          ("BENCH_cluster.json", CLUSTER_OK),
+                          ("BENCH_e2e.json", E2E_OK)):
+        f = tmp_path / name
+        f.write_text(json.dumps(payload))
+        schema.validate_file(f)
+    unknown = tmp_path / "BENCH_other.json"
+    unknown.write_text("{}")
+    with pytest.raises(SchemaError, match="no schema registered"):
+        schema.validate_file(unknown)
+
+
+# --------------------------------------------------- the real artifact ---
+
+@pytest.mark.slow
+def test_fig8_artifact_passes_roofline_schema():
+    """Run the real fig8 benchmark in-process and validate the exact
+    payload run.py would write — the PR's acceptance shape."""
+    from benchmarks import common, fig8_macs_per_issue, run
+
+    saved = common.ROWS[:]
+    common.ROWS.clear()
+    try:
+        fig8_macs_per_issue.main()
+        payload = run.payload_from_rows(common.ROWS)
+    finally:
+        common.ROWS[:] = saved
+    schema.validate_fig8_roofline(payload, bits=(8, 4, 2))

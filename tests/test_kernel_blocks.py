@@ -11,7 +11,8 @@ from conftest import hypothesis_api
 given, settings, st = hypothesis_api()
 
 from repro.core import packing
-from repro.kernels.common import LANE, conv_default_block, conv_working_set
+from repro.kernels.common import (LANE, SUBLANE_I8, conv_default_block,
+                                  conv_working_set, gemm_working_set)
 from repro.kernels.qmatmul import default_block
 
 BUDGET = 8 * 1024 * 1024
@@ -23,11 +24,40 @@ BUDGET = 8 * 1024 * 1024
 @settings(max_examples=100, deadline=None)
 def test_default_block_fits_vmem(m, n, k, a_bits, w_bits):
     bm, bn, bk = default_block(m, n, k, a_bits, w_bits, BUDGET)
-    pf_a, pf_w = 8 // a_bits, 8 // w_bits
-    work = 2 * (bm * (bk // pf_a) + (bk // pf_w) * bn) + 2 * bm * bn * 4
-    assert work <= BUDGET
+    assert gemm_working_set(bm, bn, bk, a_bits, w_bits) <= BUDGET
     assert bk % packing.CHUNK == 0
     assert bm >= 32 and bn >= 128
+
+
+def test_gemm_working_set_counts_double_buffered_copies():
+    """Regression: the fit check must count 2x residency for every
+    pipelined block (x/w K tiles, out tile, epilogue params), not just
+    the operand tiles — the pre-fix formula under-counted by the second
+    out-block buffer plus both param-block buffers, so a tile at the
+    budget edge could overflow VMEM once double-buffered."""
+    bm, bn, bk, a_bits, w_bits = 256, 512, 1024, 8, 8
+    work = gemm_working_set(bm, bn, bk, a_bits, w_bits)
+    under = (2 * (bm * bk + bk * bn)      # operands only, double-buffered
+             + 2 * bm * bn * 4)           # old formula: acc + single out
+    assert work > under
+    missed = work - under                 # second out buffer + 2x params
+    assert missed == bm * bn * 4 + 2 * 3 * bn * 4
+
+
+def test_default_block_boundary_at_budget():
+    """At a budget exactly equal to the chosen tile's working set the
+    selector keeps the tile; one byte less forces a strictly smaller tile
+    (the fit check is the working set, with no hidden slack)."""
+    m, n, k, a_bits, w_bits = 256, 512, 2048, 4, 4
+    blk = default_block(m, n, k, a_bits, w_bits, BUDGET)
+    exact = gemm_working_set(*blk, a_bits, w_bits)
+    assert default_block(m, n, k, a_bits, w_bits, exact) == blk
+    smaller = default_block(m, n, k, a_bits, w_bits, exact - 1)
+    assert smaller != blk
+    assert gemm_working_set(*smaller, a_bits, w_bits) <= exact - 1
+    # the floor tile is never shrunk below MXU alignment
+    assert smaller[0] >= SUBLANE_I8 and smaller[1] >= LANE
+    assert smaller[2] % packing.CHUNK == 0
 
 
 def _check_conv_block(ho, wo, cout, fh, fw, cin_pad, stride, a_bits, w_bits):

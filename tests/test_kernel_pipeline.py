@@ -1,0 +1,276 @@
+"""Differential harness for the kernel software-pipeline modes.
+
+The Mac&Load analogue ('double_buffer': packed operands stay in HBM, the
+kernel owns two VMEM slots per operand and prefetches the next K tile /
+receptive-field tap behind the current dot) must be a pure *scheduling*
+change: for both ops, every (a_bits, w_bits) pair, every epilogue, and
+ragged-edge grids,
+
+    pipelined == non-pipelined == eager_ref   (bit-exact)
+
+because both modes consume identical packed operands and accumulate in the
+same int32 order. Also pins the resolution order (explicit arg -> plan
+hint -> REPRO_QPIPELINE env -> tune-cache winner -> 'off') and that the
+non-kernel backends accept-and-ignore the knob. Property tests fuzz the
+geometry; they skip (not hard-fail) without hypothesis (conftest guard).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from conftest import hypothesis_api
+
+given, settings, st = hypothesis_api()
+
+from repro.core import packing
+from repro.kernels import api, tune
+from repro.kernels.common import PIPELINE_MODES, check_pipeline
+from repro.kernels.qconv.kernel import qconv2d_fused
+from repro.kernels.qmatmul.kernel import qmatmul_packed
+
+from test_backend_api import _mk_acts, _mk_conv, _mk_qdot_params
+
+BITS = (8, 4, 2)
+
+
+def _qdot_all_modes(params, x, **kw):
+    """api.qdot under every pipeline mode, first result == eager oracle."""
+    want = np.asarray(api.qdot(params, x, backend="eager_ref", **kw))
+    outs = {p: np.asarray(api.qdot(params, x, backend="pallas_interpret",
+                                   pipeline=p, **kw))
+            for p in PIPELINE_MODES}
+    return want, outs
+
+
+# ------------------------------------------------------ qdot: bit grid ---
+
+@pytest.mark.parametrize("ab", BITS)
+@pytest.mark.parametrize("wb", BITS)
+def test_qdot_pipeline_parity_bit_grid(ab, wb, rng):
+    params = _mk_qdot_params(rng, ab, wb)
+    x = _mk_acts(rng, ab)
+    want, outs = _qdot_all_modes(params, x)
+    for p, got in outs.items():
+        assert np.array_equal(got, want), (p, ab, wb)
+
+
+@pytest.mark.parametrize("epilogue", ["int", "raw", "dequant"])
+def test_qdot_pipeline_parity_epilogues(epilogue, rng):
+    params = _mk_qdot_params(rng, 4, 2)
+    x = _mk_acts(rng, 4)
+    want, outs = _qdot_all_modes(params, x, epilogue=epilogue, scale=0.25)
+    for p, got in outs.items():
+        if epilogue == "dequant":
+            np.testing.assert_allclose(np.asarray(got, np.float32),
+                                       np.asarray(want, np.float32),
+                                       rtol=1e-2)
+        else:
+            assert np.array_equal(got, want), (p, epilogue)
+
+
+@pytest.mark.parametrize("m,k,n,block", [
+    (48, 512, 160, (16, 128, 256)),   # ragged M/N, nk=2
+    (33, 384, 128, (32, 128, 128)),   # M pads 33 -> 64, nk=3
+    (16, 256, 130, (16, 128, 256)),   # ragged N, single K tile
+])
+def test_qdot_pipeline_ragged_grid(m, k, n, block, rng):
+    """Edge tiles (M/N padded to the block) and multi-tile K loops agree
+    across modes — the db kernel's fori_loop + warm-up DMA owns the whole
+    contraction, so nk > 1 exercises the slot rotation."""
+    params = _mk_qdot_params(rng, 4, 4, K=k, N=n)
+    x = _mk_acts(rng, 4, M=m, K=k)
+    want, outs = _qdot_all_modes(params, x, block=block)
+    for p, got in outs.items():
+        assert got.shape == (m, n)
+        assert np.array_equal(got, want), (p, m, k, n)
+
+
+def test_qmatmul_packed_direct_db_vs_off(rng):
+    """The kernel entry itself (no api padding): both modes bit-exact on
+    an exactly-tiled shape with nk=4 slot rotations."""
+    m, k, n = 32, 1024, 128
+    params = _mk_qdot_params(rng, 2, 8, K=k, N=n)
+    xp = packing.pack(_mk_acts(rng, 2, M=m, K=k), 2, axis=-1)
+    kw = dict(a_bits=2, a_signed=False, w_bits=8, d=params.d,
+              out_bits=params.out_bits, block=(32, 128, 256),
+              interpret=True)
+    off = qmatmul_packed(xp, params.w_packed, params.kappa, params.lam,
+                         params.m, pipeline="off", **kw)
+    db = qmatmul_packed(xp, params.w_packed, params.kappa, params.lam,
+                        params.m, pipeline="double_buffer", **kw)
+    assert np.array_equal(np.asarray(off), np.asarray(db))
+
+
+# ----------------------------------------------------- qconv: bit grid ---
+
+@pytest.mark.parametrize("ab", BITS)
+@pytest.mark.parametrize("wb", BITS)
+def test_qconv_pipeline_parity_bit_grid(ab, wb, rng):
+    qp, xq = _mk_conv(rng, ab, wb)
+    want = np.asarray(api.qconv(qp, xq, backend="eager_ref"))
+    for p in PIPELINE_MODES:
+        got = np.asarray(api.qconv(qp, xq, backend="pallas_interpret",
+                                   pipeline=p))
+        assert np.array_equal(got, want), (p, ab, wb)
+
+
+@pytest.mark.parametrize("epilogue", ["int", "raw", "dequant"])
+def test_qconv_pipeline_parity_epilogues(epilogue, rng):
+    """'int' checks against the eager oracle; 'raw'/'dequant' (which
+    eager_ref does not implement for qconv) pin db == off bit-exact —
+    the scheduling-only claim."""
+    qp, xq = _mk_conv(rng, 4, 4)
+    if epilogue == "int":
+        want = np.asarray(api.qconv(qp, xq, backend="eager_ref"))
+    else:
+        want = np.asarray(api.qconv(qp, xq, epilogue=epilogue, scale=0.25,
+                                    backend="pallas_interpret",
+                                    pipeline="off"), np.float32)
+    for p in PIPELINE_MODES:
+        kw = {} if epilogue == "int" else {"epilogue": epilogue,
+                                           "scale": 0.25}
+        got = np.asarray(api.qconv(qp, xq, backend="pallas_interpret",
+                                   pipeline=p, **kw))
+        if epilogue != "int":
+            got = np.asarray(got, np.float32)
+        assert np.array_equal(got, want), (p, epilogue)
+
+
+@pytest.mark.parametrize("H,W,F,stride,pad", [
+    (7, 5, 3, 1, 1),     # ragged Ho vs bho tiles
+    (9, 9, 3, 2, 1),     # strided tap gather
+    (8, 8, 1, 1, 0),     # 1x1: single tap, no halo
+    (11, 11, 5, 1, 2),   # 5x5: 25 tap DMAs per tile
+])
+def test_qconv_pipeline_ragged_geometry(H, W, F, stride, pad, rng):
+    """Tap-loop prefetch across awkward geometries: every tap's strided
+    VMEM slice and its halo rows come from the HBM image identically in
+    both modes."""
+    qp, xq = _mk_conv(rng, 4, 4, H=H, W=W)
+    # rebuild with the target filter geometry
+    from repro.core import QuantSpec, calibrate_activation, calibrate_weight
+    from repro.core.quantize import quantize
+    from repro.kernels.qconv import quantize_conv
+    cin, cout = 24, 40
+    x = np.maximum(rng.normal(size=(2, H, W, cin)), 0).astype(np.float32)
+    w = rng.normal(size=(F, F, cin, cout)).astype(np.float32) * 0.08
+    sw = calibrate_weight(jnp.asarray(w), 4)
+    sx = calibrate_activation(x, 4, 100.0)
+    qp = quantize_conv(jnp.asarray(w), sw,
+                       rng.normal(size=(cout,)).astype(np.float32) * .05 + .3,
+                       np.zeros((cout,), np.float32), sx,
+                       QuantSpec.activation(4, 8.0), stride, pad)
+    xq = quantize(jnp.asarray(x), sx)
+    want = np.asarray(api.qconv(qp, xq, backend="eager_ref"))
+    for p in PIPELINE_MODES:
+        got = np.asarray(api.qconv(qp, xq, backend="pallas_interpret",
+                                   pipeline=p))
+        assert np.array_equal(got, want), (p, H, W, F, stride, pad)
+
+
+# ----------------------------------------------------------- resolution ---
+
+def test_pipeline_env_resolution(rng, monkeypatch):
+    """REPRO_QPIPELINE selects the mode when no explicit arg/hint is
+    given; a bogus value fails loudly at the call site."""
+    params = _mk_qdot_params(rng, 4, 4)
+    x = _mk_acts(rng, 4)
+    want = np.asarray(api.qdot(params, x, backend="eager_ref"))
+    monkeypatch.setenv(api.ENV_PIPELINE, "double_buffer")
+    got = np.asarray(api.qdot(params, x, backend="pallas_interpret"))
+    assert np.array_equal(got, want)
+    monkeypatch.setenv(api.ENV_PIPELINE, "bogus")
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        api.qdot(params, x, backend="pallas_interpret")
+
+
+def test_pipeline_plan_hints_and_explicit_precedence(rng, monkeypatch):
+    """Explicit arg beats the plan hint; the plan hint beats the env."""
+    params = _mk_qdot_params(rng, 4, 4)
+    x = _mk_acts(rng, 4)
+    want = np.asarray(api.qdot(params, x, backend="eager_ref"))
+    monkeypatch.setenv(api.ENV_PIPELINE, "bogus")  # must never be reached
+    got = np.asarray(api.qdot(params, x, backend="pallas_interpret",
+                              plan_hints={"pipeline": "double_buffer"}))
+    assert np.array_equal(got, want)
+    got = np.asarray(api.qdot(params, x, backend="pallas_interpret",
+                              pipeline="off",
+                              plan_hints={"pipeline": "bogus"}))
+    assert np.array_equal(got, want)
+
+
+def test_pipeline_tune_cache_resolution(rng):
+    """With no arg/hint/env, the measured tune-cache winner is used (and
+    produces the same bits as 'off')."""
+    params = _mk_qdot_params(rng, 4, 4)
+    x = _mk_acts(rng, 4)
+    want = np.asarray(api.qdot(params, x, backend="eager_ref"))
+    tune.clear()
+    try:
+        tune.record_block("qdot", (16, 256, 128), 4, 4, "pallas_interpret",
+                          (16, 128, 256), pipeline="double_buffer")
+        got = np.asarray(api.qdot(params, x, backend="pallas_interpret"))
+        assert np.array_equal(got, want)
+    finally:
+        tune.clear()
+
+
+def test_non_kernel_backends_ignore_pipeline(rng):
+    """xla/eager_ref have no pipeline concept: the knob is accepted and
+    ignored (plans can set it globally without forking per backend)."""
+    params = _mk_qdot_params(rng, 4, 4)
+    x = _mk_acts(rng, 4)
+    want = np.asarray(api.qdot(params, x, backend="eager_ref"))
+    for name in ("xla", "eager_ref"):
+        got = np.asarray(api.qdot(params, x, backend=name,
+                                  pipeline="double_buffer"))
+        assert np.array_equal(got, want), name
+
+
+def test_check_pipeline_rejects_unknown():
+    assert check_pipeline("off") == "off"
+    assert check_pipeline("double_buffer") == "double_buffer"
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        check_pipeline("triple_buffer")
+
+
+# ------------------------------------------------------- property fuzz ---
+
+@given(m=st.integers(1, 40), nk=st.integers(1, 4),
+       n=st.integers(100, 200),
+       ab=st.sampled_from(BITS), wb=st.sampled_from(BITS))
+@settings(max_examples=15, deadline=None)
+def test_qdot_pipeline_parity_fuzz(m, nk, n, ab, wb):
+    rng = np.random.default_rng(m * 1000 + nk * 100 + n + ab * 10 + wb)
+    k = nk * packing.CHUNK
+    params = _mk_qdot_params(rng, ab, wb, K=k, N=n)
+    x = _mk_acts(rng, ab, M=m, K=k)
+    want, outs = _qdot_all_modes(params, x,
+                                 block=(32, 128, packing.CHUNK))
+    for p, got in outs.items():
+        assert np.array_equal(got, want), (p, m, k, n, ab, wb)
+
+
+@given(h=st.integers(4, 12), w=st.integers(4, 12),
+       f=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]),
+       ab=st.sampled_from(BITS), wb=st.sampled_from(BITS))
+@settings(max_examples=10, deadline=None)
+def test_qconv_pipeline_parity_fuzz(h, w, f, stride, ab, wb):
+    rng = np.random.default_rng(h * 100 + w * 10 + f + stride + ab + wb)
+    from repro.core import QuantSpec, calibrate_activation, calibrate_weight
+    from repro.core.quantize import quantize
+    from repro.kernels.qconv import quantize_conv
+    cin, cout = 16, 32
+    x = np.maximum(rng.normal(size=(1, h, w, cin)), 0).astype(np.float32)
+    wgt = rng.normal(size=(f, f, cin, cout)).astype(np.float32) * 0.1
+    sx = calibrate_activation(x, ab, 100.0)
+    qp = quantize_conv(jnp.asarray(wgt), calibrate_weight(jnp.asarray(wgt), wb),
+                       np.full((cout,), 0.3, np.float32),
+                       np.zeros((cout,), np.float32), sx,
+                       QuantSpec.activation(ab, 8.0), stride, f // 2)
+    xq = quantize(jnp.asarray(x), sx)
+    want = np.asarray(api.qconv(qp, xq, backend="eager_ref"))
+    for p in PIPELINE_MODES:
+        got = np.asarray(api.qconv(qp, xq, backend="pallas_interpret",
+                                   pipeline=p))
+        assert np.array_equal(got, want), (p, h, w, f, stride, ab, wb)

@@ -61,6 +61,9 @@ def test_fig9_cluster_bench_cli(tmp_path):
     r = _run(["benchmarks.fig9_cluster_scaling", "--devices", "1,2,4,8",
               "--json", str(out)])
     assert out.exists(), r.stderr[-1500:]
+    sys.path.insert(0, str(ROOT))
+    from benchmarks import schema
+    schema.validate_file(out)           # the checked-in artifact schema
     d = json.loads(out.read_text())
     assert d["path"] == "repro.kernels.api.qdot_sharded"
     rows = d["rows"]

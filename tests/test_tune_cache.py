@@ -1,0 +1,146 @@
+"""The measured autotune cache (`repro.kernels.tune`), schema v3.
+
+Entries carry {block, pipeline, us}; this file pins the artifact
+lifecycle the CI slow lane depends on:
+
+* sweep -> persist -> reload round-trip: `autotune_qdot`/`autotune_qconv`
+  winners survive save/clear/load/merge with block AND pipeline intact,
+  and api.* consumes both on the reloaded cache;
+* stale-version artifacts fail loudly (`load` raises; the env preload
+  downgrades to a RuntimeWarning but loads nothing);
+* merge() conflict semantics: incoming entry wins (last measurement is
+  freshest) — pinned so cache-artifact merging in CI stays deterministic;
+* REPRO_QTUNE_CACHE pointing at a missing path warns once and falls back
+  to the analytic selectors.
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.kernels import api, tune
+
+
+@pytest.fixture(autouse=True)
+def _clean_cache():
+    tune.clear()
+    yield
+    tune.clear()
+
+
+def test_entry_roundtrip_carries_pipeline_and_us(tmp_path):
+    tune.record_block("qdot", (64, 256, 256), 4, 4, "pallas_interpret",
+                      (32, 128, 128), pipeline="double_buffer", us=12.5)
+    f = tmp_path / "tune.json"
+    tune.save(f)
+    tune.clear()
+    assert tune.get_block("qdot", (64, 256, 256), 4, 4,
+                          "pallas_interpret") is None
+    tune.merge(tune.load(f))
+    e = tune.get_entry("qdot", (64, 256, 256), 4, 4, "pallas_interpret")
+    assert e == {"block": (32, 128, 128), "pipeline": "double_buffer",
+                 "us": 12.5}
+    assert tune.get_pipeline("qdot", (64, 256, 256), 4, 4,
+                             "pallas_interpret") == "double_buffer"
+    # the artifact is the versioned v3 schema
+    d = json.loads(f.read_text())
+    assert d["version"] == tune.CACHE_VERSION == 3
+    (entry,) = d["entries"].values()
+    assert set(entry) == {"block", "pipeline", "us"}
+
+
+def test_record_rejects_unknown_pipeline():
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        tune.record_block("qdot", (8, 128, 128), 8, 8, "xla",
+                          (8, 128, 128), pipeline="bogus")
+
+
+@pytest.mark.slow
+def test_sweep_persist_reload_roundtrip(tmp_path, rng):
+    """The full lifecycle: measured sweep -> JSON artifact -> fresh
+    process state -> api picks up both the tile and the pipeline mode."""
+    params, xp = tune._mk_qdot_artifact(rng, 32, 256, 128, 4, 4)
+    blk, pipe = tune.autotune_qdot(
+        params, xp, backend="pallas_interpret", iters=1,
+        candidates=[(32, 128, 128), (32, 128, 256)])
+    assert pipe in tune.PIPELINE_MODES
+    cparams, x = tune._mk_qconv_artifact(rng, 8, 8, 16, 128, 3, 3, 1, 1,
+                                         4, 4)
+    cblk, cpipe = tune.autotune_qconv(cparams, x,
+                                      backend="pallas_interpret", iters=1)
+    f = tmp_path / "tune.json"
+    tune.save(f)
+    tune.clear()
+
+    tune.merge(tune.load(f))
+    e = tune.get_entry("qdot", (32, 256, 128), 4, 4, "pallas_interpret")
+    assert tuple(e["block"]) == blk and e["pipeline"] == pipe
+    assert e["us"] is not None and e["us"] > 0
+    shape = (1, 8, 8, 16, 3, 3, 1, 1, 128, 1)
+    ce = tune.get_entry("qconv", shape, 4, 4, "pallas_interpret")
+    assert tuple(ce["block"]) == cblk and ce["pipeline"] == cpipe
+    # the reloaded winners are live: api resolves them and stays bit-exact
+    want = np.asarray(api.qdot_packed(params, xp, backend="eager_ref"))
+    got = np.asarray(api.qdot_packed(params, xp,
+                                     backend="pallas_interpret"))
+    assert np.array_equal(got, want)
+
+
+def test_stale_version_fails_loudly(tmp_path):
+    f = tmp_path / "stale.json"
+    f.write_text(json.dumps({"version": 2, "blocks":
+                             {"qdot|8x128x128|a8w8|xla": [8, 128, 128]}}))
+    with pytest.raises(ValueError, match="unsupported tune-cache version"):
+        tune.load(f)
+
+
+def test_merge_conflict_incoming_wins(tmp_path):
+    tune.record_block("qdot", (64, 256, 256), 4, 4, "xla",
+                      (32, 128, 128), pipeline="off")
+    other = tune.TuneCache()
+    other.put("qdot", (64, 256, 256), 4, 4, "xla", (64, 256, 256),
+              pipeline="double_buffer", us=3.0)
+    other.put("qdot", (8, 128, 128), 8, 8, "xla", (8, 128, 128))
+    tune.merge(other)
+    e = tune.get_entry("qdot", (64, 256, 256), 4, 4, "xla")
+    assert e["block"] == (64, 256, 256)          # incoming replaced ours
+    assert e["pipeline"] == "double_buffer"
+    assert tune.get_block("qdot", (8, 128, 128), 8, 8, "xla") == \
+        (8, 128, 128)                            # disjoint keys union
+
+
+def _reset_env_preload(monkeypatch, path):
+    monkeypatch.setenv(tune.CACHE_ENV, str(path))
+    monkeypatch.setattr(tune, "_ENV_LOADED", False)
+
+
+def test_env_preload_missing_path_warns(tmp_path, monkeypatch):
+    _reset_env_preload(monkeypatch, tmp_path / "nope.json")
+    with pytest.warns(RuntimeWarning, match="does not exist"):
+        assert tune.get_block("qdot", (8, 128, 128), 8, 8, "xla") is None
+    # one warning total: the preload latches
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        tune.get_block("qdot", (8, 128, 128), 8, 8, "xla")
+
+
+def test_env_preload_stale_artifact_warns_not_raises(tmp_path, monkeypatch):
+    f = tmp_path / "stale.json"
+    f.write_text(json.dumps({"version": 1, "blocks": {}}))
+    _reset_env_preload(monkeypatch, f)
+    with pytest.warns(RuntimeWarning, match="unsupported tune-cache"):
+        assert tune.get_block("qdot", (8, 128, 128), 8, 8, "xla") is None
+
+
+def test_env_preload_valid_artifact_loads(tmp_path, monkeypatch):
+    tune.record_block("qdot", (64, 256, 256), 4, 4, "pallas_interpret",
+                      (32, 128, 256), pipeline="double_buffer")
+    f = tmp_path / "tune.json"
+    tune.save(f)
+    tune.clear()
+    _reset_env_preload(monkeypatch, f)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert tune.get_pipeline("qdot", (64, 256, 256), 4, 4,
+                                 "pallas_interpret") == "double_buffer"

@@ -393,6 +393,11 @@ def test_e2e_benchmark_smoke(tmp_path):
              extra_env={"XLA_FLAGS":
                         "--xla_force_host_platform_device_count=8"})
     assert out.exists(), r.stderr[-1500:]
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks import schema
+    schema.validate_file(out)           # the checked-in artifact schema
     rows = json.load(open(out))["rows"]
     totals = [row for row in rows if row["layer"] == "total"]
     assert {row["devices"] for row in totals} == {1, 2}
