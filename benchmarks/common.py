@@ -3,12 +3,14 @@
 
 CPU wall times do NOT predict TPU throughput; each benchmark therefore also
 derives the v5e roofline projection (the graded quantity) from byte/flop
-counts, and CSV rows carry both.
+counts, and CSV rows carry both. Timing goes through the one shared timer
+(`repro.obs.time_call`); `counted_time_call` additionally reads the
+software performance counters (`repro.obs.counters`) around the timed
+loop so rows can carry *measured* MAC/µs and packed-bytes columns next to
+the analytic projections.
 """
-import time
-
-import jax
-import numpy as np
+from repro.obs import counters as obs_counters
+from repro.obs import trace as obs
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -19,26 +21,51 @@ ROWS = []
 
 
 def time_call(fn, *args, warmup=1, iters=3):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    """Mean µs per call — thin alias over the shared timer."""
+    return obs.time_call(fn, *args, warmup=warmup, iters=iters)
 
 
-def emit(name, us, derived="", backend="", pipeline="", frac_of_peak=None):
+def counted_time_call(fn, *args, warmup=1, iters=3):
+    """Time ``fn`` and read the op counters around the loop.
+
+    Returns ``(us_per_call, per_call_counts)`` where the counts dict has
+    the mean per-call ``macs`` / ``packed_bytes`` / ``logical_bytes``
+    attributed by `repro.kernels.api` (force-enabled for the duration,
+    so the columns exist without ``REPRO_OBS`` in the environment).
+    ``fn`` must reach the registry un-jitted — under `jax.jit` counters
+    record once per compilation, not per call.
+    """
+    with obs.enabled_scope():
+        before = obs_counters.snapshot()
+        us = obs.time_call(fn, *args, warmup=warmup, iters=iters)
+        after = obs_counters.snapshot()
+    calls = warmup + iters
+    per_call = {"macs": 0.0, "packed_bytes": 0.0, "logical_bytes": 0.0}
+    for d in obs_counters.delta(after, before).values():
+        for f in per_call:
+            per_call[f] += d[f] / calls
+    return us, per_call
+
+
+def emit(name, us, derived="", backend="", pipeline="", frac_of_peak=None,
+         macs_per_us=None, packed_bytes=None):
     """`backend` names the kernel backend (repro.kernels.api) the row
     measured, so the perf trajectory can compare backends per row.
     `pipeline` names the kernel software-pipeline mode the row ran
     (kernels/common.PIPELINE_MODES) and `frac_of_peak` is the v5e
     roofline fraction-of-peak-MACs column — both optional; rows that
-    carry them are the pipelined-vs-not roofline ladder (fig8)."""
+    carry them are the pipelined-vs-not roofline ladder (fig8).
+    `macs_per_us`/`packed_bytes` are the counter-measured throughput and
+    per-call packed traffic (`counted_time_call`) — measured, not
+    model-derived, so the roofline columns are auditable."""
     ROWS.append({"name": name, "us_per_call": round(float(us), 1),
                  "derived": str(derived), "backend": str(backend),
                  "pipeline": str(pipeline),
                  "frac_of_peak": (None if frac_of_peak is None
-                                  else round(float(frac_of_peak), 4))})
+                                  else round(float(frac_of_peak), 4)),
+                 "macs_per_us": (None if macs_per_us is None
+                                 else round(float(macs_per_us), 2)),
+                 "packed_bytes": (None if packed_bytes is None
+                                  else int(packed_bytes))})
     print(f"{name},{us:.1f},{derived},{backend},{pipeline},"
           f"{'' if frac_of_peak is None else f'{frac_of_peak:.4f}'}")

@@ -20,7 +20,8 @@ from repro.core import (QuantSpec, quantize, calibrate_weight,
                         calibrate_activation)
 from repro.kernels.api import qconv, qdot
 from repro.kernels.qconv import quantize_conv, im2col_hwc
-from benchmarks.common import emit, time_call, PEAK_FLOPS, HBM_BW
+from repro.obs import trace as obs
+from benchmarks.common import counted_time_call, emit, PEAK_FLOPS, HBM_BW
 
 # the kernel-family backend CI/CPU runs can execute (the real `pallas`
 # backend asserts a TPU platform); rows carry it so trajectories are
@@ -42,10 +43,10 @@ def run_layer(H, W, rng):
         qp = quantize_conv(jnp.asarray(w), sw, bn_s, bn_b, sx, sy, 1, 1)
         xq = quantize(jnp.asarray(x), sx)
 
-        us_full = time_call(
+        us_full, counts_full = counted_time_call(
             lambda xq=xq, qp=qp: qconv(qp, xq, backend=BACKEND))
         cols, ho, wo = im2col_hwc(xq, 3, 3, 1, 1)
-        us_mm = time_call(
+        us_mm, counts_mm = counted_time_call(
             lambda c=cols, qp=qp: qdot(qp.gemm, c.reshape(-1, 288),
                                        backend=BACKEND))
         # v5e projection: memory-bound at these sizes
@@ -56,9 +57,12 @@ def run_layer(H, W, rng):
         t_cmp = 2 * macs / PEAK_FLOPS
         emit(f"fig11_conv{H}x{W}_{bits}bit_full", us_full,
              f"v5e_us={max(t_mem,t_cmp)*1e6:.3f};macs={macs}",
-             backend=BACKEND)
+             backend=BACKEND, macs_per_us=counts_full["macs"] / us_full,
+             packed_bytes=counts_full["packed_bytes"])
         emit(f"fig11_conv{H}x{W}_{bits}bit_matmul_only", us_mm,
-             f"v5e_mem_term_us={t_mem*1e6:.3f}", backend=BACKEND)
+             f"v5e_mem_term_us={t_mem*1e6:.3f}", backend=BACKEND,
+             macs_per_us=counts_mm["macs"] / us_mm,
+             packed_bytes=counts_mm["packed_bytes"])
 
 
 def main():
@@ -69,3 +73,4 @@ def main():
 
 if __name__ == "__main__":
     main()
+    obs.export_if_configured("BENCH_trace.json")

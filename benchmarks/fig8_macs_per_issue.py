@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core import packing
 from repro.kernels import api, tune
-from benchmarks.common import emit, time_call, PEAK_FLOPS, HBM_BW
+from repro.obs import trace as obs
+from benchmarks.common import counted_time_call, emit, PEAK_FLOPS, HBM_BW
 
 # the kernel-family backend CI/CPU runs can execute (the real `pallas`
 # backend asserts a TPU platform); rows carry it so trajectories are
@@ -56,15 +57,18 @@ def main():
     for bits in (8, 4, 2):
         params, xp = tune._mk_qdot_artifact(rng, M, K, N, bits, bits)
         for pipe in ("off", "double_buffer"):
-            us = time_call(
+            us, counts = counted_time_call(
                 lambda p=params, x=xp, pl=pipe: api.qdot_packed(
                     p, x, backend=BACKEND, pipeline=pl),
                 warmup=1, iters=2)
             frac, t_v5e = roofline(bits, pipelined=(pipe == "double_buffer"))
             emit(f"fig8_{bits}bit_{pipe}", us,
                  f"v5e_us={t_v5e * 1e6:.3f};macs={M * K * N}",
-                 backend=BACKEND, pipeline=pipe, frac_of_peak=frac)
+                 backend=BACKEND, pipeline=pipe, frac_of_peak=frac,
+                 macs_per_us=counts["macs"] / us,
+                 packed_bytes=counts["packed_bytes"])
 
 
 if __name__ == "__main__":
     main()
+    obs.export_if_configured("BENCH_trace.json")

@@ -4,10 +4,18 @@ Prints ``name,us_per_call,derived,backend,pipeline,frac_of_peak`` CSV rows
 and writes the same data as machine-readable JSON (``--json``, default
 ``BENCH_kernels.json``: name -> us_per_call, plus the derived annotations
 under "derived", the kernel backend measured under "backend", the kernel
-pipeline mode under "pipeline", and the v5e roofline fraction-of-peak
-column under "frac_of_peak") so CI can archive the perf trajectory run
-over run and compare backends/pipeline modes per row. (Block-shape
-autotuning has its own CLI: ``python -m repro.kernels.tune``.)
+pipeline mode under "pipeline", the v5e roofline fraction-of-peak
+column under "frac_of_peak", and the counter-measured "macs_per_us" /
+"packed_bytes" columns from `benchmarks.common.counted_time_call`) so CI
+can archive the perf trajectory run over run and compare
+backends/pipeline modes per row. (Block-shape autotuning has its own
+CLI: ``python -m repro.kernels.tune``.)
+
+With ``REPRO_OBS=1`` the session additionally exports a Chrome
+trace-event artifact (``REPRO_OBS_TRACE`` path, default
+``BENCH_trace.json``) carrying kernel spans, per-bit-width MAC counters,
+and the dispatch decision log — render it with
+``python -m repro.obs.report``.
 """
 import argparse
 import json
@@ -15,6 +23,7 @@ import json
 from benchmarks import (common, fig8_macs_per_issue, fig9_cluster_scaling,
                         fig11_conv_layers, fig13_sota_comparison,
                         table1_envelope)
+from repro.obs import trace as obs
 
 
 def payload_from_rows(rows) -> dict:
@@ -29,6 +38,10 @@ def payload_from_rows(rows) -> dict:
                      if r.get("pipeline")},
         "frac_of_peak": {r["name"]: r["frac_of_peak"] for r in rows
                          if r.get("frac_of_peak") is not None},
+        "macs_per_us": {r["name"]: r["macs_per_us"] for r in rows
+                        if r.get("macs_per_us") is not None},
+        "packed_bytes": {r["name"]: r["packed_bytes"] for r in rows
+                         if r.get("packed_bytes") is not None},
     }
 
 
@@ -44,6 +57,9 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
             json.dump(payload_from_rows(common.ROWS), f, indent=2,
                       sort_keys=True)
         print(f"# wrote {len(common.ROWS)} rows -> {json_path}")
+    trace_path = obs.export_if_configured("BENCH_trace.json")
+    if trace_path:
+        print(f"# wrote trace -> {trace_path}")
 
 
 if __name__ == "__main__":

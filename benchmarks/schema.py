@@ -7,10 +7,14 @@ is pinned here and validated by tests/test_bench_schema.py:
 
   BENCH_kernels.json  benchmarks/run.py    column dicts keyed by row name
                       (us_per_call, derived, backend, pipeline,
-                      frac_of_peak — the last two are the fig8 roofline
-                      ladder columns)
+                      frac_of_peak — the fig8 roofline ladder columns —
+                      plus the counter-measured macs_per_us /
+                      packed_bytes columns)
   BENCH_cluster.json  fig9_cluster_scaling  {version, gemm, path, rows}
   BENCH_e2e.json      e2e_networks          {version, batch, rows}
+  BENCH_trace.json    repro.obs             Chrome trace-event object +
+                      the "repro" payload (counters, op counters,
+                      dispatch log) — `check_trace`
 
 Validation is dependency-free (no jsonschema): `SchemaError` carries the
 JSON-path of the first offending field.
@@ -62,7 +66,9 @@ def validate_kernels(payload) -> None:
             ("derived", str, None),
             ("backend", str, None),
             ("pipeline", str, lambda v: v in PIPELINE_MODES),
-            ("frac_of_peak", _NUM, lambda v: 0.0 <= v <= 1.0)):
+            ("frac_of_peak", _NUM, lambda v: 0.0 <= v <= 1.0),
+            ("macs_per_us", _NUM, lambda v: v >= 0),
+            ("packed_bytes", int, lambda v: v >= 0)):
         d = _need(payload, col, dict, "$")
         for name, v in d.items():
             if name not in us:
@@ -85,6 +91,10 @@ def validate_fig8_roofline(payload, bits=(8, 4, 2)) -> None:
                 _fail(f"$.pipeline.{name}", f"expected {mode!r}")
             if name not in frac:
                 _fail(f"$.frac_of_peak.{name}", "missing roofline column")
+            for col in ("macs_per_us", "packed_bytes"):
+                if name not in payload[col]:
+                    _fail(f"$.{col}.{name}",
+                          "missing counter-measured column")
         if frac[db] < frac[off]:
             _fail(f"$.frac_of_peak.{db}",
                   "pipelined roofline below the exposed-DMA one")
@@ -145,12 +155,60 @@ def validate_e2e(payload) -> None:
                 _typed(r[opt], types, f"{p}.{opt}", check)
 
 
+# -------------------------------------------------------- BENCH_trace ---
+
+_TRACE_PHASES = ("X", "i", "B", "E", "M", "C")
+_COUNTER_FIELDS = ("calls", "macs", "logical_bytes", "packed_bytes")
+
+
+def check_trace(payload) -> None:
+    """A `repro.obs` Chrome trace-event artifact: the trace-event object
+    form (every event carries name/ph/ts; complete events a dur) plus
+    the repo payload under "repro" (generic counters, per-(op, bits,
+    backend, pipeline) op counters, the dispatch decision log)."""
+    events = _need(payload, "traceEvents", list, "$")
+    for i, e in enumerate(events):
+        p = f"$.traceEvents[{i}]"
+        _typed(e, dict, p)
+        _need(e, "name", str, p)
+        _need(e, "ph", str, p, lambda v: v in _TRACE_PHASES)
+        _need(e, "ts", _NUM, p, lambda v: v >= 0)
+        if e["ph"] == "X":
+            _need(e, "dur", _NUM, p, lambda v: v >= 0)
+        if "args" in e:
+            _typed(e["args"], dict, f"{p}.args")
+    repro = _need(payload, "repro", dict, "$")
+    _need(repro, "version", int, "$.repro", lambda v: v == 1)
+    counters = _need(repro, "counters", dict, "$.repro")
+    for name, v in counters.items():
+        _typed(v, _NUM, f"$.repro.counters.{name}")
+    ops = _need(repro, "op_counters", dict, "$.repro")
+    for key, bucket in ops.items():
+        p = f"$.repro.op_counters.{key}"
+        if len(key.split("|")) != 4:
+            _fail(p, "key is not op|w{W}a{A}|backend|pipeline")
+        _typed(bucket, dict, p)
+        for f in _COUNTER_FIELDS:
+            _need(bucket, f, int, p, lambda v: v >= 0)
+    dispatch = _need(repro, "dispatch", list, "$.repro")
+    for i, d in enumerate(dispatch):
+        p = f"$.repro.dispatch[{i}]"
+        _typed(d, dict, p)
+        _need(d, "op", str, p)
+        _need(d, "backend", str, p)
+        _need(d, "backend_source", str, p)
+        _need(d, "pipeline", str, p, lambda v: v in PIPELINE_MODES)
+        _need(d, "pipeline_source", str, p)
+        _need(d, "ts", _NUM, p, lambda v: v >= 0)
+
+
 # ------------------------------------------------------------ dispatch ---
 
 VALIDATORS = {
     "BENCH_kernels.json": validate_kernels,
     "BENCH_cluster.json": validate_cluster,
     "BENCH_e2e.json": validate_e2e,
+    "BENCH_trace.json": check_trace,
 }
 
 

@@ -48,10 +48,16 @@ def check_paper_map(errors: list):
                               f"-> {span}")
     # coverage floor: all six benchmark scripts + both kernel op entry
     # modules + the vision subsystem must be mapped (ISSUE-4 criterion,
-    # raised by ISSUE-5 to include the network-level benchmark, and by
+    # raised by ISSUE-5 to include the network-level benchmark, by
     # ISSUE-6 to include the Mac&Load pipeline row: the autotune cache,
-    # the differential harness, and the benchmark-artifact schema)
+    # the differential harness, and the benchmark-artifact schema, and
+    # by ISSUE-7 to include the observability subsystem)
     required = {
+        "src/repro/obs/trace.py",
+        "src/repro/obs/counters.py",
+        "src/repro/obs/env.py",
+        "src/repro/obs/report.py",
+        "tests/test_obs.py",
         "benchmarks/fig8_macs_per_issue.py",
         "benchmarks/fig9_cluster_scaling.py",
         "benchmarks/fig11_conv_layers.py",

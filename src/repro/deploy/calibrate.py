@@ -44,6 +44,7 @@ import numpy as np
 from repro.core import packing
 from repro.deploy.apply import dense_inventory, quantized_dense_paths
 from repro.nn.layers import dense_tap, quantize_dense_weights
+from repro.obs import trace as obs
 
 CANDIDATE_BITS = (8, 4, 2)
 
@@ -189,8 +190,10 @@ def calibrate(model, fp_params, token_batches: Sequence[np.ndarray], *,
     if cfg.family == "lm" and not cfg.cross_every:
         collector = _Collector(stats, bits, a_bits, max_rows)
         with dense_tap(collector):
-            for toks in token_batches:
-                _replay_lm(model, fp_params, toks, collector)
+            for i, toks in enumerate(token_batches):
+                with obs.span("calibrate.batch", cat="deploy", batch=i,
+                              tokens=int(np.asarray(toks).size)):
+                    _replay_lm(model, fp_params, toks, collector)
         # paths the replay never reaches (none today for plain LMs) fall
         # back to weight-only so the planner always has full coverage
         missed = {p: st for p, st in stats.items() if st.taps == 0}
@@ -332,7 +335,9 @@ def calibrate_vision(cfg, fp_params, image_batches: Sequence[np.ndarray], *,
     collector = _ConvCollector(stats, geom, bits, a_bits, max_images)
     collector.id2path = id2path
     with conv_tap(collector):
-        for imgs in image_batches:
-            forward_fp(cfg, fp_params, jnp.asarray(imgs, jnp.float32),
-                       edge_tap=edge_tap)
+        for i, imgs in enumerate(image_batches):
+            with obs.span("calibrate.batch", cat="deploy", batch=i,
+                          images=int(np.asarray(imgs).shape[0])):
+                forward_fp(cfg, fp_params, jnp.asarray(imgs, jnp.float32),
+                           edge_tap=edge_tap)
     return stats, absmax

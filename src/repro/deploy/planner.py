@@ -24,6 +24,7 @@ from repro.core import packing
 from repro.deploy.calibrate import CANDIDATE_BITS, CalibStats
 from repro.deploy.policy import PlanRule, PrecisionPlan
 from repro.launch.hlo_costs import shape_numel_bytes
+from repro.obs import trace as obs
 
 
 def packed_weight_bytes(layers: int, d_in: int, d_out: int,
@@ -72,26 +73,31 @@ def plan_mixed_precision(stats: Dict[str, CalibStats], budget: float, *,
         i = cand.index(b)
         return cand[i + 1] if i + 1 < len(cand) else None
 
-    while True:
-        best, best_rate = None, -1.0
-        for p, b in assign.items():
-            nb = next_bits(b)
-            if nb is None:
-                continue
-            d_sens = stats[p].sens(nb) - stats[p].sens(b)
-            d_bytes = _path_bytes(stats[p], b) - _path_bytes(stats[p], nb)
-            if d_bytes <= 0:
-                continue
-            if total + max(d_sens, 0.0) > budget:
-                continue
-            rate = d_bytes / max(d_sens, 1e-12)
-            if rate > best_rate:
-                best, best_rate = (p, nb, d_sens), rate
-        if best is None:
-            break
-        p, nb, d_sens = best
-        assign[p] = nb
-        total += d_sens
+    with obs.span("plan.search", cat="deploy", paths=len(stats),
+                  budget=float(budget)) as search_span:
+        while True:
+            best, best_rate = None, -1.0
+            for p, b in assign.items():
+                nb = next_bits(b)
+                if nb is None:
+                    continue
+                d_sens = stats[p].sens(nb) - stats[p].sens(b)
+                d_bytes = _path_bytes(stats[p], b) - _path_bytes(stats[p], nb)
+                if d_bytes <= 0:
+                    continue
+                if total + max(d_sens, 0.0) > budget:
+                    continue
+                rate = d_bytes / max(d_sens, 1e-12)
+                if rate > best_rate:
+                    best, best_rate = (p, nb, d_sens), rate
+            if best is None:
+                break
+            p, nb, d_sens = best
+            assign[p] = nb
+            total += d_sens
+        search_span.set(
+            total_sensitivity=total,
+            demotions=sum(1 for p in assign if assign[p] != cand[0]))
 
     table = {p: {
         "w_bits": assign[p],

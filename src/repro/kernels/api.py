@@ -39,6 +39,14 @@ for this (op, shape, bits, backend) -> ``off``. The ``xla`` and
 ``eager_ref`` backends have no pipeline concept and ignore the mode, so
 differential tests can force one mode suite-wide.
 
+**Observability.** With ``REPRO_OBS=1`` (`repro.obs`), every resolution
+records one structured dispatch event — requested backend/pipeline, plan
+hint, env override, tune-cache hit/miss and winner, final choice with
+per-field provenance — queryable via `repro.obs.dispatch_log()`, and
+every entry-point call bumps the per-(op, bits, backend, pipeline)
+MAC/byte counters and runs inside a ``cat='kernel'`` span. Disabled
+(the default), the instrumentation is a single predicate per call.
+
 **Cluster-parallel path (paper fig. 9).** Passing ``mesh=`` to
 `qdot`/`qconv` (or calling `qdot_sharded`/`qconv_sharded` directly) runs
 the op under `shard_map` on an N-device mesh — the JAX analog of the
@@ -55,7 +63,6 @@ is resolved per *local shard shape* by the same registry rules;
 from __future__ import annotations
 
 import dataclasses
-import os
 import warnings
 from typing import Callable, Dict, Optional, Tuple
 
@@ -67,6 +74,9 @@ from repro.core import packing
 from repro.kernels import tune
 from repro.kernels.common import (PIPELINE_MODES, apply_epilogue,
                                   check_pipeline, round_up)
+from repro.obs import counters as obs_counters
+from repro.obs import env as obsenv
+from repro.obs import trace as obs
 
 OPS = ("qdot", "qconv")
 ENV_VAR = "REPRO_QBACKEND"
@@ -132,7 +142,7 @@ def resolve(op: str, shape, a_bits: int, w_bits: int, *,
     capability-ordered default (first DEFAULT_ORDER entry whose
     ``supports`` accepts this shape/bits/platform).
     """
-    requested = backend or os.environ.get(ENV_VAR) or None
+    requested = backend or obsenv.get(ENV_VAR) or None
     if requested:
         return get(op, requested)
     plat = platform()
@@ -231,23 +241,90 @@ def _pad_axis(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def _merge_hints(backend, block, pipeline, plan_hints):
-    if plan_hints:
-        backend = backend or plan_hints.get("backend")
-        block = block or plan_hints.get("block")
-        pipeline = pipeline or plan_hints.get("pipeline")
-    return backend, block, pipeline
+def _resolve_call(op: str, shape, a_bits: int, w_bits: int, *,
+                  backend: Optional[str], block: Optional[tuple],
+                  pipeline: Optional[str], plan_hints: Optional[dict],
+                  sharded: bool = False):
+    """One-stop per-call resolution: merge plan hints, resolve the
+    backend (explicit -> plan -> ``REPRO_QBACKEND`` -> capability
+    default), look up the tuned (block, pipeline) with one cache probe,
+    and — when observability is on — record the full decision with
+    provenance in the dispatch log (`repro.obs.dispatch_log`).
+
+    Pipeline: explicit -> plan -> ``REPRO_QPIPELINE`` -> tuned winner ->
+    'off'. Block: explicit -> plan -> tuned winner -> None (the backend's
+    analytic selector). Returns ``(spec, block, pipeline)``.
+    """
+    hints = plan_hints or {}
+    explicit_backend, explicit_block = backend, block
+    explicit_pipeline = pipeline
+    backend = backend or hints.get("backend")
+    block = block or hints.get("block")
+    pipeline = pipeline or hints.get("pipeline")
+
+    env_backend = obsenv.get(ENV_VAR) or None
+    spec = resolve(op, shape, a_bits, w_bits, backend=backend)
+    if sharded:
+        _reject_host_backend(spec)
+    entry = tune.get_entry(op, shape, a_bits, w_bits, spec.name)
+
+    block_source = ("explicit" if explicit_block is not None
+                    else "plan" if block is not None
+                    else "tuned" if entry is not None else "analytic")
+    if block is None and entry is not None:
+        block = tuple(entry["block"])
+
+    # env is only consulted (and therefore only validated) when nothing
+    # higher-precedence decided — an explicit arg or plan hint must
+    # shadow even a bogus REPRO_QPIPELINE value
+    env_pipeline = (None if pipeline is not None
+                    else obsenv.get(ENV_PIPELINE) or None)
+    pipeline_source = ("explicit" if explicit_pipeline is not None
+                      else "plan" if pipeline is not None
+                      else "env" if env_pipeline is not None
+                      else "tuned" if entry is not None else "default")
+    pipeline = check_pipeline(
+        pipeline or env_pipeline
+        or (entry["pipeline"] if entry is not None else None) or "off")
+
+    if obs.enabled():
+        backend_source = ("explicit" if explicit_backend is not None
+                          else "plan" if backend is not None
+                          else "env" if env_backend is not None
+                          else "default")
+        obs.dispatch_event(
+            op=op, shape=tuple(int(s) for s in shape),
+            a_bits=int(a_bits), w_bits=int(w_bits),
+            backend=spec.name, backend_source=backend_source,
+            plan_backend=hints.get("backend"), env_backend=env_backend,
+            block=None if block is None else tuple(int(b) for b in block),
+            block_source=block_source,
+            pipeline=pipeline, pipeline_source=pipeline_source,
+            env_pipeline=env_pipeline,
+            tune_cache_hit=entry is not None,
+            tune_winner=None if entry is None else {
+                "block": list(entry["block"]),
+                "pipeline": entry["pipeline"], "us": entry["us"]},
+            sharded=sharded)
+    return spec, block, pipeline
 
 
-def _resolve_pipeline(pipeline: Optional[str], op: str, shape,
-                      a_bits: int, w_bits: int, backend: str) -> str:
-    """Pipeline-mode resolution: explicit arg/plan hint ->
-    ``REPRO_QPIPELINE`` env -> measured autotune-cache winner -> 'off'."""
-    if pipeline is None:
-        pipeline = os.environ.get(ENV_PIPELINE) or None
-    if pipeline is None:
-        pipeline = tune.get_pipeline(op, shape, a_bits, w_bits, backend)
-    return check_pipeline(pipeline or "off")
+def _run_counted(spec, op: str, shape, a_bits: int, w_bits: int,
+                 pipeline: str, thunk):
+    """Run the resolved backend. With observability on, bump the
+    (op, bits, backend, pipeline) MAC/byte counters and wrap the run in
+    a ``cat='kernel'`` span that blocks on the result so device time
+    lands inside it; off, it's a bare call."""
+    if not obs.enabled():
+        return thunk()
+    costs = obs_counters.record(op, shape, a_bits, w_bits,
+                                backend=spec.name, pipeline=pipeline)
+    with obs.span(op, cat="kernel", backend=spec.name, pipeline=pipeline,
+                  a_bits=int(a_bits), w_bits=int(w_bits),
+                  shape=tuple(int(s) for s in shape),
+                  macs=costs["macs"],
+                  packed_bytes=costs["packed_bytes"]) as sp:
+        return sp.sync(thunk())
 
 
 def qdot(params, x_hat, *, epilogue: str = "int", scale=1.0,
@@ -284,20 +361,16 @@ def qdot_packed(params, x_packed, *, epilogue: str = "int", scale=1.0,
                 plan_hints: Optional[dict] = None):
     """`qdot` over already-packed activations (fused chains where the
     previous layer's epilogue emitted packed integer images)."""
-    backend, block, pipeline = _merge_hints(backend, block, pipeline,
-                                            plan_hints)
     m = x_packed.shape[0]
     k = x_packed.shape[1] * packing.pack_factor(params.a_bits)
     n = params.w_packed.shape[1]
-    spec = resolve("qdot", (m, k, n), params.a_bits, params.w_bits,
-                   backend=backend)
-    if block is None:
-        block = tune.get_block("qdot", (m, k, n), params.a_bits,
-                               params.w_bits, spec.name)
-    pipeline = _resolve_pipeline(pipeline, "qdot", (m, k, n),
-                                 params.a_bits, params.w_bits, spec.name)
-    return spec.run(params, x_packed, epilogue=epilogue, scale=scale,
-                    block=block, pipeline=pipeline)
+    spec, block, pipeline = _resolve_call(
+        "qdot", (m, k, n), params.a_bits, params.w_bits, backend=backend,
+        block=block, pipeline=pipeline, plan_hints=plan_hints)
+    return _run_counted(
+        spec, "qdot", (m, k, n), params.a_bits, params.w_bits, pipeline,
+        lambda: spec.run(params, x_packed, epilogue=epilogue, scale=scale,
+                         block=block, pipeline=pipeline))
 
 
 # ----------------------------------------------------------- qconv entry ---
@@ -349,18 +422,16 @@ def qconv(params, x_hat, *, epilogue: str = "int", scale=1.0,
                              tp_axis=tp_axis, epilogue=epilogue, scale=scale,
                              backend=backend, block=block, pipeline=pipeline,
                              plan_hints=plan_hints)
-    backend, block, pipeline = _merge_hints(backend, block, pipeline,
-                                            plan_hints)
     shape = _conv_shape(params, x_hat)
     g = params.gemm
-    spec = resolve("qconv", shape, g.a_bits, g.w_bits, backend=backend)
+    spec, block, pipeline = _resolve_call(
+        "qconv", shape, g.a_bits, g.w_bits, backend=backend, block=block,
+        pipeline=pipeline, plan_hints=plan_hints)
     _check_grouped(params, spec, shape)
-    if block is None:
-        block = tune.get_block("qconv", shape, g.a_bits, g.w_bits, spec.name)
-    pipeline = _resolve_pipeline(pipeline, "qconv", shape, g.a_bits,
-                                 g.w_bits, spec.name)
-    return spec.run(params, x_hat, epilogue=epilogue, scale=scale,
-                    block=block, pipeline=pipeline)
+    return _run_counted(
+        spec, "qconv", shape, g.a_bits, g.w_bits, pipeline,
+        lambda: spec.run(params, x_hat, epilogue=epilogue, scale=scale,
+                         block=block, pipeline=pipeline))
 
 
 # ------------------------------------------------ cluster-parallel path ---
@@ -404,8 +475,6 @@ def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     from jax.sharding import PartitionSpec as P
     from repro.parallel import sharding as shrules
 
-    backend, block, pipeline = _merge_hints(backend, block, pipeline,
-                                            plan_hints)
     dp, tp, dpe, tpe = _cluster_prologue(mesh, dp_axis, tp_axis)
     wspecs = shrules.packed_linear_specs(params, mesh, tp_axis=tp_axis)
 
@@ -415,14 +484,10 @@ def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     n = params.w_packed.shape[1]
     k_pad = params.w_packed.shape[0] * packing.pack_factor(params.w_bits)
     m_loc, n_loc = x2.shape[0] // dp, n // tp
-    spec = _reject_host_backend(
-        resolve("qdot", (m_loc, k_pad, n_loc), params.a_bits,
-                params.w_bits, backend=backend))
-    if block is None:
-        block = tune.get_block("qdot", (m_loc, k_pad, n_loc), params.a_bits,
-                               params.w_bits, spec.name)
-    pipeline = _resolve_pipeline(pipeline, "qdot", (m_loc, k_pad, n_loc),
-                                 params.a_bits, params.w_bits, spec.name)
+    spec, block, pipeline = _resolve_call(
+        "qdot", (m_loc, k_pad, n_loc), params.a_bits, params.w_bits,
+        backend=backend, block=block, pipeline=pipeline,
+        plan_hints=plan_hints, sharded=True)
     per_n = np.ndim(scale) == 1  # per-channel dequant scale shards with N
     sc = jnp.asarray(scale)
 
@@ -434,13 +499,18 @@ def qdot_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
         return spec.run(p_loc, xp, epilogue=epilogue, scale=s, block=block,
                         pipeline=pipeline)
 
-    out = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(dpe, None), wspecs["w_packed"], wspecs["kappa"],
-                  wspecs["lam"], wspecs["m"],
-                  P(tpe) if per_n else P()),
-        out_specs=P(dpe, tpe), check_rep=False)(
-        x2, params.w_packed, params.kappa, params.lam, params.m, sc)
+    # counted at the *global* GEMM size (the shard-local per-device work
+    # is global/dp/tp; the dispatch event above carries the local shape)
+    out = _run_counted(
+        spec, "qdot", (x2.shape[0], k_pad, n), params.a_bits,
+        params.w_bits, pipeline,
+        lambda: shard_map(
+            local, mesh=mesh,
+            in_specs=(P(dpe, None), wspecs["w_packed"], wspecs["kappa"],
+                      wspecs["lam"], wspecs["m"],
+                      P(tpe) if per_n else P()),
+            out_specs=P(dpe, tpe), check_rep=False)(
+            x2, params.w_packed, params.kappa, params.lam, params.m, sc))
     return out[:m].reshape(*lead, n)
 
 
@@ -460,8 +530,6 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     from jax.sharding import PartitionSpec as P
     from repro.parallel import sharding as shrules
 
-    backend, block, pipeline = _merge_hints(backend, block, pipeline,
-                                            plan_hints)
     dp, tp, dpe, tpe = _cluster_prologue(mesh, dp_axis, tp_axis)
     wspecs = shrules.packed_conv_specs(params, mesh, tp_axis=tp_axis)
 
@@ -472,14 +540,11 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
     shape_loc = (x.shape[0] // dp, x.shape[1], x.shape[2], x.shape[3],
                  params.fh, params.fw, params.stride, params.padding,
                  cout_loc, getattr(params, "groups", 1))
-    spec = _reject_host_backend(
-        resolve("qconv", shape_loc, g.a_bits, g.w_bits, backend=backend))
+    spec, block, pipeline = _resolve_call(
+        "qconv", shape_loc, g.a_bits, g.w_bits, backend=backend,
+        block=block, pipeline=pipeline, plan_hints=plan_hints,
+        sharded=True)
     _check_grouped(params, spec, shape_loc)
-    if block is None:
-        block = tune.get_block("qconv", shape_loc, g.a_bits, g.w_bits,
-                               spec.name)
-    pipeline = _resolve_pipeline(pipeline, "qconv", shape_loc, g.a_bits,
-                                 g.w_bits, spec.name)
     per_n = np.ndim(scale) == 1
     sc = jnp.asarray(scale)
 
@@ -491,14 +556,19 @@ def qconv_sharded(params, x_hat, *, mesh, dp_axis: str = "data",
         return spec.run(p_loc, xs, epilogue=epilogue, scale=s, block=block,
                         pipeline=pipeline)
 
-    out = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(dpe, None, None, None), wspecs["w_packed_fused"],
-                  wspecs["gemm"]["w_packed"], wspecs["gemm"]["kappa"],
-                  wspecs["gemm"]["lam"], wspecs["gemm"]["m"],
-                  P(tpe) if per_n else P()),
-        out_specs=P(dpe, None, None, tpe), check_rep=False)(
-        x, params.w_packed_fused, g.w_packed, g.kappa, g.lam, g.m, sc)
+    shape_glob = (x.shape[0], x.shape[1], x.shape[2], x.shape[3],
+                  params.fh, params.fw, params.stride, params.padding,
+                  params.cout, getattr(params, "groups", 1))
+    out = _run_counted(
+        spec, "qconv", shape_glob, g.a_bits, g.w_bits, pipeline,
+        lambda: shard_map(
+            local, mesh=mesh,
+            in_specs=(P(dpe, None, None, None), wspecs["w_packed_fused"],
+                      wspecs["gemm"]["w_packed"], wspecs["gemm"]["kappa"],
+                      wspecs["gemm"]["lam"], wspecs["gemm"]["m"],
+                      P(tpe) if per_n else P()),
+            out_specs=P(dpe, None, None, tpe), check_rep=False)(
+            x, params.w_packed_fused, g.w_packed, g.kappa, g.lam, g.m, sc))
     return out[:nb]
 
 

@@ -34,12 +34,12 @@ CLI:
 from __future__ import annotations
 
 import json
-import os
 import pathlib
-import time
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.kernels.common import PIPELINE_MODES
+from repro.obs import env as obsenv
+from repro.obs import trace as obs
 
 # v3: entries carry the measured pipeline-mode winner (and its time in us)
 # next to the block shape — v2 artifacts' bare block lists can't express
@@ -118,7 +118,7 @@ def _maybe_load_env():
     if _ENV_LOADED:
         return
     _ENV_LOADED = True
-    path = os.environ.get(CACHE_ENV)
+    path = obsenv.get(CACHE_ENV)
     if not path:
         return
     import warnings
@@ -190,13 +190,9 @@ def entries() -> Dict[str, dict]:
 # ---------------------------------------------------------------- tuning ---
 
 def _time(fn, iters=2):
-    import jax
-    jax.block_until_ready(fn())          # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+    """Seconds per call — thin alias over the shared timer
+    (`repro.obs.time_call`, which reports µs)."""
+    return obs.time_call(fn, warmup=1, iters=iters) / 1e6
 
 
 def qdot_candidates(m: int, n: int, k: int, a_bits: int,
@@ -242,18 +238,25 @@ def _sweep(op: str, shape, a_bits: int, w_bits: int, backend: str,
     """Time every (block x pipeline) candidate; record + return the winner
     as (block, pipeline)."""
     best, best_t = None, float("inf")
-    for blk in cands:
-        for pipe in pipelines:
-            try:
-                t = _time(lambda b=blk, p=pipe: run_candidate(b, p),
-                          iters=iters)
-            except Exception:
-                continue                  # candidate not runnable; skip
-            if t < best_t:
-                best, best_t = (blk, pipe), t
-    if best is None:
-        raise RuntimeError(
-            f"no runnable (block, pipeline) candidate for {op} {shape}")
+    with obs.span("tune.sweep", cat="tune", op=op,
+                  shape=tuple(int(s) for s in shape), a_bits=int(a_bits),
+                  w_bits=int(w_bits), backend=backend,
+                  candidates=len(cands) * len(pipelines)) as sweep_span:
+        for blk in cands:
+            for pipe in pipelines:
+                try:
+                    t = _time(lambda b=blk, p=pipe: run_candidate(b, p),
+                              iters=iters)
+                except Exception:
+                    continue              # candidate not runnable; skip
+                if t < best_t:
+                    best, best_t = (blk, pipe), t
+        if best is None:
+            raise RuntimeError(
+                f"no runnable (block, pipeline) candidate for {op} {shape}")
+        sweep_span.set(winner_block=tuple(int(b) for b in best[0]),
+                       winner_pipeline=best[1],
+                       winner_us=round(best_t * 1e6, 3))
     record_block(op, shape, a_bits, w_bits, backend, best[0], best[1],
                  us=best_t * 1e6)
     return best

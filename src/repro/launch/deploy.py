@@ -29,6 +29,7 @@ from repro.deploy.policy import PLAN_VERSION, load_plan, save_plan
 from repro.launch.convert import artifact_bytes
 from repro.models.api import Model, build, get_config
 from repro.nn.layers import QuantConfig
+from repro.obs import trace as obs
 
 
 def main():
@@ -93,15 +94,19 @@ def main():
         print(f"calibrating {cfg.name}: {len(batches)} batches of "
               f"{args.calib_batch}x{args.calib_seq} tokens, "
               f"candidates W{candidates}")
-        stats = calibrate(fp_model, fp_params, batches, bits=candidates,
-                          a_bits=args.a_bits)
+        with obs.span("deploy.calibrate", cat="deploy", arch=cfg.name,
+                      batches=len(batches), candidates=candidates):
+            stats = calibrate(fp_model, fp_params, batches, bits=candidates,
+                              a_bits=args.a_bits)
 
-        budget = (auto_budget(stats, candidates) if args.budget == "auto"
-                  else float(args.budget))
-        plan = plan_mixed_precision(
-            stats, budget, candidates=candidates, a_bits=args.a_bits,
-            backend=args.backend,
-            meta={"arch": cfg.name, "smoke": args.smoke})
+        with obs.span("deploy.plan", cat="deploy", arch=cfg.name,
+                      paths=len(stats)):
+            budget = (auto_budget(stats, candidates)
+                      if args.budget == "auto" else float(args.budget))
+            plan = plan_mixed_precision(
+                stats, budget, candidates=candidates, a_bits=args.a_bits,
+                backend=args.backend,
+                meta={"arch": cfg.name, "smoke": args.smoke})
         print(f"budget {budget:.6g} -> total sensitivity "
               f"{plan.meta['total_sensitivity']:.6g}")
         for r in plan.rules:
@@ -116,8 +121,10 @@ def main():
     base = QuantConfig(mode="int", w_bits=plan.default_w_bits,
                        a_bits=plan.default_a_bits)
     q_model = Model(dataclasses.replace(cfg, quant=base, quant_plan=plan))
-    q_params = apply_plan(q_model.init(jax.random.PRNGKey(0)), fp_params,
-                          plan, plan.default_w_bits)
+    with obs.span("deploy.pack", cat="deploy", arch=cfg.name,
+                  rules=len(plan.rules)):
+        q_params = apply_plan(q_model.init(jax.random.PRNGKey(0)),
+                              fp_params, plan, plan.default_w_bits)
     mixed_b = artifact_bytes(q_params)
     fp_b = artifact_bytes(fp_params)
     if {"packed_weight_bytes", "uniform_w8_bytes"} <= set(plan.meta):
@@ -136,6 +143,9 @@ def main():
         save(args.artifact, 0, {"params": q_params})
         save_plan(plan, f"{args.artifact}/plan.json")
         print(f"packed artifact -> {args.artifact}")
+    trace_path = obs.export_if_configured("deploy_trace.json")
+    if trace_path:
+        print(f"trace -> {trace_path} (render: python -m repro.obs.report)")
     print("deploy done")
 
 

@@ -9,11 +9,15 @@ This never allocates real arrays: inputs are ShapeDtypeStructs and only
 .lower().compile() runs. Failures here are sharding/memory bugs by
 definition (see EXPERIMENTS.md §Dry-run).
 
-The os.environ lines below MUST run before any other import (jax locks the
-device count at first init); keep them first.
+The os.environ lines below MUST run before any jax import (jax locks the
+device count at first init); `repro.obs.env` is import-light (no jax) so
+reading the knob through it is safe here.
 """
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+
+from repro.obs import env as obsenv
+
+os.environ["XLA_FLAGS"] = ((obsenv.get("REPRO_EXTRA_XLA") or "") +
                            " --xla_force_host_platform_device_count=512")
 
 import argparse

@@ -34,6 +34,7 @@ import numpy as np
 from repro.launch.convert import convert_params
 from repro.models.api import build, get_config
 from repro.nn.layers import QuantConfig
+from repro.obs import trace as obs
 from repro.serve.engine import Engine, Request
 
 
@@ -139,13 +140,22 @@ def main():
         print(f"kernel backends: qdot={kb['qdot']} qconv={kb['qconv']} "
               f"(override: {ENV_VAR} or QuantConfig.backend)")
     t0 = time.time()
-    out = eng.generate(reqs)
+    with obs.span("serve.generate", cat="serve", requests=len(reqs),
+                  batch=args.batch):
+        out = eng.generate(reqs)
     dt = time.time() - t0
     toks = sum(len(r.out) for r in out)
     print(f"{toks} tokens / {dt:.2f}s = {toks / dt:.1f} tok/s (CPU, "
           f"structure-comparative only)")
+    rep = eng.utilization_report()
+    lat = rep["latency_us"]
+    if lat is not None:
+        qd = rep["queue_depth"]
+        print(f"wave latency: p50={lat['p50'] / 1e3:.1f}ms "
+              f"p95={lat['p95'] / 1e3:.1f}ms p99={lat['p99'] / 1e3:.1f}ms "
+              f"over {lat['waves']} wave(s); queue depth mean "
+              f"{qd['mean']:.1f} max {qd['max']}")
     if mesh is not None:
-        rep = eng.utilization_report()
         per = " ".join(f"d{d}={u:.0%}" for d, u in
                        enumerate(rep["per_device"]))
         print(f"cluster utilization: {rep['mean_util']:.0%} over "
@@ -153,6 +163,9 @@ def main():
               "slots")
     for r in out[:3]:
         print("  prompt", r.prompt.tolist(), "->", r.out.tolist())
+    trace_path = obs.export_if_configured("serve_trace.json")
+    if trace_path:
+        print(f"trace -> {trace_path} (render: python -m repro.obs.report)")
 
 
 if __name__ == "__main__":

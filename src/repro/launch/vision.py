@@ -79,6 +79,8 @@ def main():
         args.calib_batch, *cfg.in_hw, cfg.in_ch)).astype(np.float32)
         for _ in range(args.calib_batches)]
 
+    from repro.obs import trace as obs
+
     if args.from_plan:
         plan = load_plan(args.from_plan)
         absmax = collect_absmax(cfg, fp_params, batches)
@@ -88,14 +90,18 @@ def main():
         print(f"calibrating {cfg.name}: {len(batches)} batches of "
               f"{args.calib_batch} images {cfg.in_hw}, "
               f"candidates W{candidates}")
-        stats, absmax = calibrate_vision(cfg, fp_params, batches,
-                                         bits=candidates)
-        budget = (auto_budget(stats, candidates) if args.budget == "auto"
-                  else float(args.budget))
-        plan = plan_mixed_precision(
-            stats, budget, candidates=candidates, a_bits=args.a_bits,
-            backend=args.backend,
-            meta={"arch": cfg.name, "smoke": args.smoke})
+        with obs.span("deploy.calibrate", cat="deploy", arch=cfg.name,
+                      batches=len(batches), candidates=candidates):
+            stats, absmax = calibrate_vision(cfg, fp_params, batches,
+                                             bits=candidates)
+        with obs.span("deploy.plan", cat="deploy", arch=cfg.name,
+                      paths=len(stats)):
+            budget = (auto_budget(stats, candidates)
+                      if args.budget == "auto" else float(args.budget))
+            plan = plan_mixed_precision(
+                stats, budget, candidates=candidates, a_bits=args.a_bits,
+                backend=args.backend,
+                meta={"arch": cfg.name, "smoke": args.smoke})
         for r in plan.rules:
             st = stats[r.pattern]
             print(f"  {r.pattern:<16} W{r.w_bits}A{r.a_bits}  "
@@ -105,8 +111,10 @@ def main():
         print(f"plan ({len(plan.rules)} rules, w_bits "
               f"{plan.distinct_w_bits()}) -> {args.out}")
 
-    qnet = quantize_net(cfg, fp_params, absmax, plan=plan,
-                        backend=args.backend)
+    with obs.span("deploy.pack", cat="deploy", arch=cfg.name,
+                  rules=len(plan.rules)):
+        qnet = quantize_net(cfg, fp_params, absmax, plan=plan,
+                            backend=args.backend)
     print(f"packed artifact: {vision_artifact_bytes(qnet):,} bytes, "
           f"per-layer bits {qnet.layer_bits()}")
 
@@ -118,15 +126,27 @@ def main():
     print(f"kernel backends: {engine.kernel_backends()}")
     images = rng.uniform(0, 1, size=(
         args.requests, *cfg.in_hw, cfg.in_ch)).astype(np.float32)
-    logits = engine.run(images)
+    with obs.span("serve.generate", cat="serve", requests=len(images),
+                  batch=args.batch):
+        logits = engine.run(images)
     preds = logits.argmax(-1)
     print(f"served {len(images)} images in waves of {args.batch}: "
           f"preds {preds.tolist()}")
+    rep = engine.utilization_report()
+    lat = rep["latency_us"]
+    if lat is not None:
+        qd = rep["queue_depth"]
+        print(f"wave latency: p50={lat['p50'] / 1e3:.1f}ms "
+              f"p95={lat['p95'] / 1e3:.1f}ms p99={lat['p99'] / 1e3:.1f}ms "
+              f"over {lat['waves']} wave(s); queue depth mean "
+              f"{qd['mean']:.1f} max {qd['max']}")
     if mesh is not None:
-        rep = engine.utilization_report()
         print(f"utilization: mean {rep['mean_util']:.3f} over "
               f"{rep['waves']} waves, per-device "
               f"{[round(u, 3) for u in rep['per_device']]}")
+    trace_path = obs.export_if_configured("vision_trace.json")
+    if trace_path:
+        print(f"trace -> {trace_path} (render: python -m repro.obs.report)")
     print("vision deploy done")
 
 

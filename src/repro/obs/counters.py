@@ -1,0 +1,128 @@
+"""Software performance counters: MACs and bytes per quantized op call.
+
+The paper reports MAC/cycle per bit-width from RI5CY hardware counters
+(Sec. V); this is the software analogue. `repro.kernels.api` calls
+:func:`record` at every `qdot`/`qconv` entry so effective MAC/µs and
+arithmetic intensity per bit-width fall out of any instrumented run.
+
+Accounting is keyed by ``(op, w_bits, a_bits, backend, pipeline)`` —
+rendered as ``"{op}|w{w}a{a}|{backend}|{pipeline}"`` — and each bucket
+accumulates
+
+    calls           number of recorded entry-point calls
+    macs            multiply-accumulates: m*k*n (qdot, padded K as the
+                    kernel sees it), n*ho*wo*fh*fw*(cin/groups)*cout (qconv)
+    logical_bytes   one byte per logical int8 element moved (activations
+                    + weights + output) — the unpacked traffic a W8A8
+                    kernel would move
+    packed_bytes    the same traffic in packed containers: sub-byte
+                    operands shrink by 8/bits — the memory-roofline term
+                    the paper's sub-byte speedup comes from
+
+``logical/packed`` per bucket is the measured container-compression
+ratio; ``macs/packed_bytes`` is the arithmetic intensity the fig8
+roofline plots. Recording is a no-op unless `repro.obs.trace` is
+enabled. Under `jax.jit` the entry points run once per *trace*, so
+counters record per compilation there — the instrumented benchmarks and
+the serve engines call the registry un-jitted, where counts are
+per-call.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+from repro.obs import trace
+
+_LOCK = threading.Lock()
+_OPS: Dict[str, Dict[str, int]] = {}
+
+_FIELDS = ("calls", "macs", "logical_bytes", "packed_bytes")
+
+
+def _pack_factor(bits: int) -> int:
+    return 8 // int(bits)
+
+
+def key(op: str, w_bits: int, a_bits: int, backend: str,
+        pipeline: str) -> str:
+    return f"{op}|w{int(w_bits)}a{int(a_bits)}|{backend}|{pipeline}"
+
+
+def parse_key(k: str) -> Dict[str, object]:
+    op, bits, backend, pipeline = k.split("|")
+    w, a = bits[1:].split("a")
+    return {"op": op, "w_bits": int(w), "a_bits": int(a),
+            "backend": backend, "pipeline": pipeline}
+
+
+def conv_out_hw(h, w, fh, fw, stride, padding):
+    ho = (h + 2 * padding - fh) // stride + 1
+    wo = (w + 2 * padding - fw) // stride + 1
+    return ho, wo
+
+
+def qdot_costs(shape, a_bits: int, w_bits: int) -> Dict[str, int]:
+    """(m, k, n) GEMM cost model; k is the padded K the kernel contracts."""
+    m, k, n = (int(s) for s in shape[:3])
+    macs = m * k * n
+    logical = m * k + k * n + m * n
+    packed = (m * k // _pack_factor(a_bits)
+              + k * n // _pack_factor(w_bits) + m * n)
+    return {"calls": 1, "macs": macs, "logical_bytes": logical,
+            "packed_bytes": packed}
+
+
+def qconv_costs(shape, a_bits: int, w_bits: int) -> Dict[str, int]:
+    """Registry conv shape key -> costs. ``shape`` is the 9/10-tuple
+    (n, h, w, cin, fh, fw, stride, padding, cout[, groups])."""
+    n, h, w, cin, fh, fw, stride, padding, cout = (
+        int(s) for s in shape[:9])
+    groups = int(shape[9]) if len(shape) > 9 else 1
+    ho, wo = conv_out_hw(h, w, fh, fw, stride, padding)
+    k = fh * fw * (cin // groups)          # contraction depth per out pixel
+    macs = n * ho * wo * k * cout
+    logical = n * h * w * cin + k * cout + n * ho * wo * cout
+    packed = (n * h * w * cin // _pack_factor(a_bits)
+              + k * cout // _pack_factor(w_bits) + n * ho * wo * cout)
+    return {"calls": 1, "macs": macs, "logical_bytes": logical,
+            "packed_bytes": packed}
+
+
+def record(op: str, shape, a_bits: int, w_bits: int, *, backend: str,
+           pipeline: str) -> Optional[Dict[str, int]]:
+    """Bump the (op, bits, backend, pipeline) bucket for one call; returns
+    the per-call deltas (None when observability is off)."""
+    if not trace.enabled():
+        return None
+    costs = (qdot_costs if op == "qdot" else qconv_costs)(
+        shape, a_bits, w_bits)
+    k = key(op, w_bits, a_bits, backend, pipeline)
+    with _LOCK:
+        bucket = _OPS.setdefault(k, dict.fromkeys(_FIELDS, 0))
+        for f in _FIELDS:
+            bucket[f] += costs[f]
+    return costs
+
+
+def snapshot() -> Dict[str, Dict[str, int]]:
+    with _LOCK:
+        return {k: dict(v) for k, v in _OPS.items()}
+
+
+def reset() -> None:
+    with _LOCK:
+        _OPS.clear()
+
+
+def delta(after: Dict[str, Dict[str, int]],
+          before: Dict[str, Dict[str, int]]) -> Dict[str, Dict[str, int]]:
+    """Per-bucket ``after - before`` (buckets with no change dropped) —
+    how benchmarks attribute counts to one timed region."""
+    out: Dict[str, Dict[str, int]] = {}
+    for k, av in after.items():
+        bv = before.get(k, {})
+        d = {f: av[f] - bv.get(f, 0) for f in _FIELDS}
+        if any(d.values()):
+            out[k] = d
+    return out

@@ -1,0 +1,138 @@
+"""Central registry of the repo's ``REPRO_*`` environment knobs.
+
+Every env knob the runtime honours is declared here with its type, its
+validated value space, and a one-line doc. Call sites read through
+:func:`get` / :func:`get_bool` instead of ``os.environ`` so that
+
+* a typo'd knob (``REPRO_QBACKND=xla``) warns instead of being silently
+  ignored — :func:`warn_unknown` scans the process environment for
+  ``REPRO_*`` names that no knob declares;
+* an invalid *value* for a choice knob raises immediately with the list
+  of accepted values, instead of surfacing as a confusing downstream
+  ``KeyError`` five layers deeper;
+* the README's knob table is generated (``python -m repro.obs.env``)
+  rather than hand-maintained.
+
+This module is import-light on purpose: no jax, no numpy, nothing from
+``repro.kernels``. ``launch/dryrun.py`` imports it *before* jax is
+initialised to assemble ``XLA_FLAGS``, and ``repro.obs.trace`` imports
+it at interpreter startup to decide whether observability is on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Optional, Tuple
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off", "")
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    name: str
+    doc: str
+    kind: str = "str"          # 'str' | 'bool' | 'path' | 'choice'
+    choices: Tuple[str, ...] = ()   # for kind='choice'
+    legacy: Tuple[str, ...] = ()    # deprecated aliases still honoured
+
+
+KNOBS = {k.name: k for k in (
+    Knob("REPRO_QBACKEND",
+         "Force the kernel backend for every `qdot`/`qconv` call "
+         "(`pallas` / `pallas_interpret` / `xla` / `eager_ref`); "
+         "validated against the registry at resolve time."),
+    Knob("REPRO_QPIPELINE",
+         "Force the kernel pipeline mode suite-wide.",
+         kind="choice", choices=("off", "double_buffer")),
+    Knob("REPRO_QTUNE_CACHE",
+         "Path to an autotune-cache JSON preloaded at first lookup "
+         "(block-shape + pipeline winners from `tune.py --sweep`).",
+         kind="path"),
+    Knob("REPRO_EXTRA_XLA",
+         "Extra `XLA_FLAGS` prepended by `repro.launch.dryrun` before "
+         "jax initialises.", legacy=("_REPRO_EXTRA_XLA",)),
+    Knob("REPRO_OBS",
+         "Enable the observability layer (`repro.obs`): spans, MAC/byte "
+         "counters, dispatch decision log. Off by default — disabled "
+         "mode records nothing and adds one predicate per call.",
+         kind="bool"),
+    Knob("REPRO_OBS_TRACE",
+         "Path where instrumented CLIs/benchmarks export the Chrome "
+         "trace-event JSON artifact on exit (implies nothing unless "
+         "REPRO_OBS is on).", kind="path"),
+)}
+
+_warned_unknown = False
+
+
+def warn_unknown() -> Tuple[str, ...]:
+    """Warn (once) about ``REPRO_*`` env vars no knob declares.
+
+    Returns the offending names so tests can assert on them without
+    capturing warnings."""
+    global _warned_unknown
+    known = set(KNOBS)
+    for k in KNOBS.values():
+        known.update(k.legacy)
+    unknown = tuple(sorted(
+        n for n in os.environ if n.startswith("REPRO_") and n not in known))
+    if unknown and not _warned_unknown:
+        _warned_unknown = True
+        warnings.warn(
+            f"unrecognized REPRO_* environment variable(s): "
+            f"{', '.join(unknown)}; known knobs: {', '.join(sorted(KNOBS))}",
+            stacklevel=2)
+    return unknown
+
+
+def get(name: str) -> Optional[str]:
+    """The validated value of knob ``name``, or None when unset/empty.
+
+    Unknown ``name`` raises (call sites must declare their knobs);
+    invalid values for choice knobs raise ValueError.
+    """
+    knob = KNOBS.get(name)
+    if knob is None:
+        raise KeyError(
+            f"undeclared env knob {name!r}; declare it in "
+            f"repro.obs.env.KNOBS (known: {sorted(KNOBS)})")
+    warn_unknown()
+    raw = os.environ.get(name)
+    if raw is None:
+        for legacy in knob.legacy:
+            raw = os.environ.get(legacy)
+            if raw is not None:
+                warnings.warn(
+                    f"env var {legacy!r} is deprecated; use {name!r}",
+                    DeprecationWarning, stacklevel=2)
+                break
+    if not raw:
+        return None
+    if knob.kind == "choice" and raw not in knob.choices:
+        raise ValueError(
+            f"{name}={raw!r} is not a valid value; choices: {knob.choices}")
+    if knob.kind == "bool" and raw.lower() not in _TRUE + _FALSE:
+        raise ValueError(
+            f"{name}={raw!r} is not boolean; use one of {_TRUE + _FALSE}")
+    return raw
+
+
+def get_bool(name: str) -> bool:
+    raw = get(name)
+    return raw is not None and raw.lower() in _TRUE
+
+
+def table() -> str:
+    """The README knob table (GitHub markdown), generated from KNOBS."""
+    rows = ["| Variable | Type | Meaning |", "| --- | --- | --- |"]
+    for knob in sorted(KNOBS.values(), key=lambda k: k.name):
+        kind = ("/".join(knob.choices) if knob.kind == "choice"
+                else knob.kind)
+        rows.append(f"| `{knob.name}` | {kind} | {knob.doc} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -28,6 +28,7 @@ packed reduction axis.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -35,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.obs import trace as obs
 
 
 @dataclasses.dataclass
@@ -45,33 +47,69 @@ class Request:
 
 
 class _WaveStats:
-    """Per-wave per-device slot utilization bookkeeping, shared by the LM
-    `Engine` and the CNN `VisionEngine`: device d owns the contiguous
-    slot range [d*B/dp, (d+1)*B/dp); real (unpadded) slots fill from 0,
-    so a padded slot is an idle cluster core (the fig. 9 readout)."""
+    """Per-wave per-device slot utilization + latency bookkeeping, shared
+    by the LM `Engine` and the CNN `VisionEngine`: device d owns the
+    contiguous slot range [d*B/dp, (d+1)*B/dp); real (unpadded) slots
+    fill from 0, so a padded slot is an idle cluster core (the fig. 9
+    readout).
+
+    Each wave additionally records its wall-clock latency (stamped by
+    ``clock``, an instance-overridable callable so tests inject a
+    deterministic fake) and the request-queue depth at admission;
+    `utilization_report()` aggregates them into p50/p95/p99 latency and
+    queue-depth stats next to the slot-utilization columns."""
 
     batch: int
     _dp: int
+    clock = staticmethod(time.perf_counter)   # seconds; override in tests
 
-    def _record_wave(self, n_real: int):
+    def _record_wave(self, n_real: int, queue_depth: int = 0):
         b_loc = self.batch // self._dp
         per_dev = [min(max(n_real - d * b_loc, 0), b_loc) / b_loc
                    for d in range(self._dp)]
         self.wave_stats.append({"n_real": n_real, "batch": self.batch,
-                                "per_device": per_dev})
+                                "per_device": per_dev,
+                                "queue_depth": queue_depth,
+                                "t0": self.clock(), "latency_us": None})
+
+    def _finish_wave(self):
+        w = self.wave_stats[-1]
+        w["latency_us"] = (self.clock() - w.pop("t0")) * 1e6
+        obs.counter("engine.waves").add(1)
+        obs.counter("engine.requests").add(w["n_real"])
+        return w
 
     def utilization_report(self) -> dict:
-        """Aggregate per-device slot utilization across the waves served
-        so far — a device whose slots were padding did no useful work."""
+        """Aggregate per-device slot utilization, wave-latency
+        percentiles, and queue-depth stats across the waves served so
+        far — a device whose slots were padding did no useful work."""
         if not self.wave_stats:
             return {"devices": self._dp, "waves": 0, "mean_util": 0.0,
-                    "per_device": [0.0] * self._dp}
+                    "per_device": [0.0] * self._dp, "latency_us": None,
+                    "queue_depth": None, "occupancy_timeline": []}
         per_dev = [float(np.mean([w["per_device"][d]
                                   for w in self.wave_stats]))
                    for d in range(self._dp)]
+        lats = [w["latency_us"] for w in self.wave_stats
+                if w.get("latency_us") is not None]
+        latency = None
+        if lats:
+            latency = {"p50": float(np.percentile(lats, 50)),
+                       "p95": float(np.percentile(lats, 95)),
+                       "p99": float(np.percentile(lats, 99)),
+                       "mean": float(np.mean(lats)),
+                       "max": float(np.max(lats)),
+                       "waves": len(lats)}
+        depths = [w.get("queue_depth", 0) for w in self.wave_stats]
         return {"devices": self._dp, "waves": len(self.wave_stats),
                 "mean_util": float(np.mean(per_dev)),
-                "per_device": per_dev}
+                "per_device": per_dev,
+                "latency_us": latency,
+                "queue_depth": {"mean": float(np.mean(depths)),
+                                "max": int(np.max(depths))},
+                # per-device real-slot occupancy over time, wave by wave
+                "occupancy_timeline": [list(w["per_device"])
+                                       for w in self.wave_stats]}
 
 
 class Engine(_WaveStats):
@@ -173,42 +211,51 @@ class Engine(_WaveStats):
             wave = queue[: self.batch]
             queue = queue[self.batch:]
             n_real = len(wave)  # pads below must never reach `done`
-            self._record_wave(n_real)
-            while len(wave) < self.batch:  # pad the last wave
-                wave.append(Request(prompt=np.array([0], np.int32),
-                                    max_new_tokens=1))
-            prompts = [r.prompt for r in wave]
-            logits, cache, pos = self._prefill_scored(prompts)
-            outs = [[] for _ in wave]
-            alive = np.ones(self.batch, bool)
-            budget = np.array([r.max_new_tokens for r in wave])
-            step = 0
-            while alive.any() and pos + step < self.max_len and \
-                    step < budget.max():
-                lg = np.asarray(logits[:, -1].astype(jnp.float32))
-                if greedy:
-                    nxt = lg.argmax(-1).astype(np.int32)
-                else:
-                    p = np.exp(lg - lg.max(-1, keepdims=True))
-                    p /= p.sum(-1, keepdims=True)
-                    nxt = np.array([rng.choice(lg.shape[-1], p=pi)
-                                    for pi in p], np.int32)
-                for i in range(self.batch):
-                    if alive[i]:
-                        outs[i].append(int(nxt[i]))
-                        if nxt[i] == self.eos or len(outs[i]) >= budget[i]:
-                            alive[i] = False
-                logits, cache = self._decode(
-                    self.params, cache, self._put_wave(nxt[:, None]),
-                    jnp.int32(pos + step))
-                step += 1
-            for r, o in zip(wave, outs):
-                r.out = np.array(o, np.int32)
-            # only the real requests of this wave — the old
-            # `max_new_tokens > 1 or out is not None` filter is always true
-            # once outputs are assigned, so pad fillers leaked into `done`
-            # and the final truncation could drop real requests behind them
-            done.extend(wave[:n_real])
+            self._record_wave(n_real, queue_depth=len(queue))
+            with obs.span("engine.wave", cat="serve", n_real=n_real,
+                          batch=self.batch,
+                          queue_depth=len(queue)) as wave_span:
+                while len(wave) < self.batch:  # pad the last wave
+                    wave.append(Request(prompt=np.array([0], np.int32),
+                                        max_new_tokens=1))
+                prompts = [r.prompt for r in wave]
+                with obs.span("engine.prefill", cat="serve"):
+                    logits, cache, pos = self._prefill_scored(prompts)
+                outs = [[] for _ in wave]
+                alive = np.ones(self.batch, bool)
+                budget = np.array([r.max_new_tokens for r in wave])
+                step = 0
+                while alive.any() and pos + step < self.max_len and \
+                        step < budget.max():
+                    lg = np.asarray(logits[:, -1].astype(jnp.float32))
+                    if greedy:
+                        nxt = lg.argmax(-1).astype(np.int32)
+                    else:
+                        p = np.exp(lg - lg.max(-1, keepdims=True))
+                        p /= p.sum(-1, keepdims=True)
+                        nxt = np.array([rng.choice(lg.shape[-1], p=pi)
+                                        for pi in p], np.int32)
+                    for i in range(self.batch):
+                        if alive[i]:
+                            outs[i].append(int(nxt[i]))
+                            if nxt[i] == self.eos or \
+                                    len(outs[i]) >= budget[i]:
+                                alive[i] = False
+                    logits, cache = self._decode(
+                        self.params, cache, self._put_wave(nxt[:, None]),
+                        jnp.int32(pos + step))
+                    step += 1
+                for r, o in zip(wave, outs):
+                    r.out = np.array(o, np.int32)
+                # only the real requests of this wave — the old
+                # `max_new_tokens > 1 or out is not None` filter is always
+                # true once outputs are assigned, so pad fillers leaked into
+                # `done` and the final truncation could drop real requests
+                # behind them
+                done.extend(wave[:n_real])
+                w = self._finish_wave()
+                wave_span.set(decode_steps=step,
+                              latency_us=w["latency_us"])
         return done
 
 
@@ -267,12 +314,18 @@ class VisionEngine(_WaveStats):
         for start in range(0, len(images), self.batch):
             wave = x_hat[start:start + self.batch]
             n_real = len(wave)
-            self._record_wave(n_real)
-            if n_real < self.batch:  # pad the last wave; pads sliced off
-                pad = np.zeros((self.batch - n_real, *wave.shape[1:]),
-                               wave.dtype)
-                wave = np.concatenate([wave, pad], axis=0)
-            logits = self._forward(jnp.asarray(wave))
-            outs.append(np.asarray(logits)[:n_real])
+            queued = max(len(images) - start - self.batch, 0)
+            self._record_wave(n_real, queue_depth=queued)
+            with obs.span("engine.wave", cat="serve", n_real=n_real,
+                          batch=self.batch,
+                          queue_depth=queued) as wave_span:
+                if n_real < self.batch:  # pad last wave; pads sliced off
+                    pad = np.zeros((self.batch - n_real, *wave.shape[1:]),
+                                   wave.dtype)
+                    wave = np.concatenate([wave, pad], axis=0)
+                logits = self._forward(jnp.asarray(wave))
+                outs.append(np.asarray(logits)[:n_real])
+                w = self._finish_wave()
+                wave_span.set(latency_us=w["latency_us"])
         return (np.concatenate(outs, axis=0) if outs
                 else np.zeros((0, self.qnet.cfg.num_classes), np.int32))

@@ -31,6 +31,38 @@ KERNELS_OK = {
                  "fig8_8bit_double_buffer": "double_buffer"},
     "frac_of_peak": {"fig8_8bit_off": 0.5004,
                      "fig8_8bit_double_buffer": 1.0},
+    # counter-measured columns (PR 7): effective MAC/us + packed bytes
+    # moved, sourced from repro.obs.counters during the timed run
+    "macs_per_us": {"fig8_8bit_off": 781.5,
+                    "fig8_8bit_double_buffer": 419.2},
+    "packed_bytes": {"fig8_8bit_off": 786432,
+                     "fig8_8bit_double_buffer": 786432},
+}
+
+TRACE_OK = {
+    "traceEvents": [
+        {"name": "qdot", "cat": "kernel", "ph": "X", "ts": 10.0,
+         "dur": 120.5, "pid": 0, "tid": 0,
+         "args": {"backend": "pallas_interpret", "pipeline": "off",
+                  "a_bits": 8, "w_bits": 4, "macs": 1048576,
+                  "packed_bytes": 28672}},
+        {"name": "dispatch:qdot", "cat": "dispatch", "ph": "i", "ts": 9.0,
+         "pid": 0, "tid": 0, "s": "t"},
+    ],
+    "displayTimeUnit": "ms",
+    "repro": {
+        "version": 1,
+        "counters": {"engine.waves": 2},
+        "op_counters": {
+            "qdot|w4a8|pallas_interpret|off": {
+                "calls": 3, "macs": 3145728, "logical_bytes": 135168,
+                "packed_bytes": 86016}},
+        "dispatch": [
+            {"op": "qdot", "backend": "pallas_interpret",
+             "backend_source": "explicit", "pipeline": "off",
+             "pipeline_source": "default", "ts": 9.0,
+             "tune_cache_hit": False}],
+    },
 }
 
 CLUSTER_OK = {
@@ -84,6 +116,11 @@ def test_kernels_fixture_valid():
     (lambda p: p["us_per_call"].update(fig8_8bit_off="fast"),
      "expected"),
     (lambda p: p["us_per_call"].update(fig8_8bit_off=True), "bool"),
+    (lambda p: p.pop("macs_per_us"), "missing required field"),
+    (lambda p: p.pop("packed_bytes"), "missing required field"),
+    (lambda p: p["macs_per_us"].update(fig8_8bit_off=-1.0),
+     "out of range"),
+    (lambda p: p["packed_bytes"].update(fig8_8bit_off=1.5), "expected"),
 ])
 def test_kernels_rejects(mutate, match):
     with pytest.raises(SchemaError, match=match):
@@ -105,6 +142,10 @@ def test_fig8_roofline_acceptance_shape():
                       lambda p: p["frac_of_peak"].pop("fig8_8bit_off"))
     with pytest.raises(SchemaError, match="missing roofline column"):
         schema.validate_fig8_roofline(nofrac, bits=(8,))
+    nomacs = _mutated(KERNELS_OK,
+                      lambda p: p["macs_per_us"].pop("fig8_8bit_off"))
+    with pytest.raises(SchemaError, match="counter-measured column"):
+        schema.validate_fig8_roofline(nomacs, bits=(8,))
 
 
 # ------------------------------------------------------------- cluster ---
@@ -145,6 +186,59 @@ def test_e2e_rejects(mutate, match):
         schema.validate_e2e(_mutated(E2E_OK, mutate))
 
 
+# --------------------------------------------------------------- trace ---
+
+def test_trace_fixture_valid():
+    schema.check_trace(TRACE_OK)
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda p: p.pop("traceEvents"), "missing required field"),
+    (lambda p: p["traceEvents"][0].pop("name"), "missing required field"),
+    (lambda p: p["traceEvents"][0].update(ph="Z"), "out of range"),
+    (lambda p: p["traceEvents"][0].update(ts=-1.0), "out of range"),
+    (lambda p: p["traceEvents"][0].pop("dur"), "missing required field"),
+    (lambda p: p["traceEvents"][0].update(args=[]), "expected"),
+    (lambda p: p["repro"].update(version=99), "out of range"),
+    (lambda p: p["repro"]["op_counters"].update(bad_key={
+        "calls": 1, "macs": 0, "logical_bytes": 0, "packed_bytes": 0}),
+     "key is not op"),
+    (lambda p: p["repro"]["op_counters"]
+     ["qdot|w4a8|pallas_interpret|off"].pop("macs"),
+     "missing required field"),
+    (lambda p: p["repro"]["dispatch"][0].pop("backend_source"),
+     "missing required field"),
+    (lambda p: p["repro"]["dispatch"][0].update(pipeline="triple_buffer"),
+     "out of range"),
+])
+def test_trace_rejects(mutate, match):
+    with pytest.raises(SchemaError, match=match):
+        schema.check_trace(_mutated(TRACE_OK, mutate))
+
+
+def test_trace_roundtrips_from_live_modules():
+    """A trace exported by repro.obs itself must pass check_trace — pins
+    the writer and the validator to the same shape."""
+    from repro.obs import counters, trace
+
+    trace.reset()
+    counters.reset()
+    with trace.enabled_scope():
+        with trace.span("qdot", cat="kernel", backend="xla", pipeline="off",
+                        a_bits=8, w_bits=4, macs=100, packed_bytes=10):
+            pass
+        trace.dispatch_event(op="qdot", backend="xla",
+                             backend_source="default", pipeline="off",
+                             pipeline_source="default",
+                             tune_cache_hit=False)
+        counters.record("qdot", (32, 256, 128), 8, 4, backend="xla",
+                        pipeline="off")
+        doc = trace.chrome_trace()
+    trace.reset()
+    counters.reset()
+    schema.check_trace(doc)
+
+
 # ------------------------------------------------------------ dispatch ---
 
 def test_validate_file_dispatch(tmp_path):
@@ -152,7 +246,8 @@ def test_validate_file_dispatch(tmp_path):
 
     for name, payload in (("BENCH_kernels.json", KERNELS_OK),
                           ("BENCH_cluster.json", CLUSTER_OK),
-                          ("BENCH_e2e.json", E2E_OK)):
+                          ("BENCH_e2e.json", E2E_OK),
+                          ("BENCH_trace.json", TRACE_OK)):
         f = tmp_path / name
         f.write_text(json.dumps(payload))
         schema.validate_file(f)
