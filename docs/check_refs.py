@@ -50,9 +50,16 @@ def check_paper_map(errors: list):
     # modules + the vision subsystem must be mapped (ISSUE-4 criterion,
     # raised by ISSUE-5 to include the network-level benchmark, by
     # ISSUE-6 to include the Mac&Load pipeline row: the autotune cache,
-    # the differential harness, and the benchmark-artifact schema, and
-    # by ISSUE-7 to include the observability subsystem)
+    # the differential harness, and the benchmark-artifact schema, by
+    # ISSUE-7 to include the observability subsystem, and by ISSUE-8 to
+    # include the continuous-batching serving runtime and its load
+    # generator)
     required = {
+        "src/repro/serve/runtime/scheduler.py",
+        "src/repro/serve/runtime/slots.py",
+        "src/repro/serve/runtime/adapters.py",
+        "benchmarks/loadgen.py",
+        "tests/test_runtime.py",
         "src/repro/obs/trace.py",
         "src/repro/obs/counters.py",
         "src/repro/obs/env.py",

@@ -202,8 +202,15 @@ def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 def attn_decode(p, x, cache, index, cfg: AttnConfig, *, theta=10000.0,
                 mode="causal", window=None, cross_kv=None,
                 ring: bool = False):
-    """One-token decode. x: (B,1,d); index: scalar int32 TRUE position;
+    """One-token decode. x: (B,1,d); index: the TRUE position — a scalar
+    int32 (wave decode: every row at the same step) or a (B,) int32
+    vector (continuous batching: each slot at its own position);
     cache: dict(k,v) of (B,T,Hk,Dh). Returns (out, new_cache).
+
+    The per-slot (vector) form runs the same per-element math as the
+    scalar form — RoPE phases, cache writes, and masks are all computed
+    row-wise — so an all-equal position vector is bit-exact vs the
+    scalar path (the serve runtime's parity invariant).
 
     ring=True treats the cache as a ring buffer of T=window slots (local
     attention): slot = index % T, each slot j holds true position
@@ -212,6 +219,8 @@ def attn_decode(p, x, cache, index, cfg: AttnConfig, *, theta=10000.0,
     """
     b = x.shape[0]
     h, hk, dh, g = cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.groups
+    index = jnp.asarray(index)
+    per_slot = index.ndim == 1            # (B,) per-slot positions
     q = _split_heads(dense_apply(p["wq"], x, qcfg=cfg.q("wq")), h, dh)
     if cross_kv is None:
         k_new = _split_heads(dense_apply(p["wk"], x, qcfg=cfg.q("wk")), hk, dh)
@@ -222,24 +231,34 @@ def attn_decode(p, x, cache, index, cfg: AttnConfig, *, theta=10000.0,
         vq = _kv_store(v_new, cfg.kv_quant_bits)
         t = cache["k"].shape[1]
         slot = (index % t) if ring else index
-        cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot,
-                                                     axis=1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot,
-                                                     axis=1),
-        }
+        if per_slot:
+            # one write position per row; values are unchanged, only the
+            # write address is batched, so bit-exactness is preserved
+            upd = jax.vmap(lambda c, u, s:
+                           jax.lax.dynamic_update_slice_in_dim(c, u, s,
+                                                               axis=0))
+            cache = {"k": upd(cache["k"], kq, slot),
+                     "v": upd(cache["v"], vq, slot)}
+        else:
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq,
+                                                         slot, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq,
+                                                         slot, axis=1),
+            }
         k = _kv_load(cache["k"], cfg.kv_quant_bits, x.dtype)
         v = _kv_load(cache["v"], cfg.kv_quant_bits, x.dtype)
         k_pos = jnp.arange(t)[None, :]
+        idx = index[:, None] if per_slot else index  # (B,1) | scalar
         if ring:
-            true_pos = index - ((index - k_pos) % t)
+            true_pos = idx - ((idx - k_pos) % t)
             allow = true_pos >= 0
             if window is not None:
-                allow = allow & (index - true_pos < window)
+                allow = allow & (idx - true_pos < window)
         else:
-            allow = k_pos <= index
+            allow = k_pos <= idx
             if mode == "local":
-                allow = allow & (index - k_pos < window)
+                allow = allow & (idx - k_pos < window)
     else:
         k, v = cross_kv
         t = k.shape[1]

@@ -272,7 +272,11 @@ def rope_apply_at(x, cos, sin, positions):
 
 
 def rope_single(x, position, theta):
-    """Table-free decode RoPE: x (B,1,H,Dh), scalar position.
+    """Table-free decode RoPE: x (B,1,H,Dh); position a scalar (wave
+    decode: every row at the same step) or a (B,) vector (continuous
+    batching: each slot at its own true position). The per-element math
+    is identical in both forms, so an all-equal vector is bit-exact vs
+    the scalar path.
 
     `theta` may be a traced scalar (per-layer dual-theta schedules). Avoids
     materializing (max_len, Dh/2) tables in decode — at 512k context the
@@ -281,8 +285,14 @@ def rope_single(x, position, theta):
     half = x.shape[-1] // 2
     theta = jnp.asarray(theta, jnp.float32)
     freqs = jnp.power(theta, -jnp.arange(0, half, dtype=jnp.float32) / half)
-    ang = position.astype(jnp.float32) * freqs          # (half,)
-    c = jnp.cos(ang).astype(x.dtype)[None, None, None, :]
-    s = jnp.sin(ang).astype(x.dtype)[None, None, None, :]
+    position = jnp.asarray(position)
+    if position.ndim == 0:
+        ang = position.astype(jnp.float32) * freqs          # (half,)
+        c = jnp.cos(ang).astype(x.dtype)[None, None, None, :]
+        s = jnp.sin(ang).astype(x.dtype)[None, None, None, :]
+    else:
+        ang = position.astype(jnp.float32)[:, None] * freqs  # (B, half)
+        c = jnp.cos(ang).astype(x.dtype)[:, None, None, :]
+        s = jnp.sin(ang).astype(x.dtype)[:, None, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

@@ -16,6 +16,10 @@ REPRO_OBS_TRACE=trace.json``) and prints
   plan / env / tuned / default), tune-cache hit rate, final
   backend×pipeline histogram.
 * **Top spans** — where the wall-clock went, by total span duration.
+* **Serving runtime** — the scheduler's admission/eviction/page counters
+  and `serve.step` span aggregate when the trace contains serving work,
+  plus a policy-comparison table from ``BENCH_serving.json``
+  (benchmarks/loadgen) when that artifact sits next to the trace.
 
 The path defaults to ``REPRO_OBS_TRACE`` then ``BENCH_trace.json``.
 Dependency-free (stdlib only): runs anywhere the JSON artifact lands,
@@ -116,6 +120,50 @@ def top_spans(doc: Dict[str, Any], n: int = 10) -> List[Dict[str, Any]]:
     return [dict(name=k, **v) for k, v in ranked]
 
 
+def serving_summary(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Serving-runtime activity in a trace: the scheduler's admission/
+    eviction/page counters (`repro.serve.runtime.slots`) and the
+    aggregate of its per-step `serve.step` spans."""
+    counters = doc.get("repro", {}).get("counters", {})
+    serve = {k: counters[k] for k in sorted(counters)
+             if k.startswith(("serve.", "engine."))}
+    steps = [e for e in doc.get("traceEvents", [])
+             if e.get("ph") == "X" and e.get("name") == "serve.step"]
+    span = None
+    if steps:
+        active = [e.get("args", {}).get("active", 0) for e in steps]
+        depth = [e.get("args", {}).get("queue_depth", 0) for e in steps]
+        span = {"steps": len(steps),
+                "total_us": sum(e.get("dur", 0.0) for e in steps),
+                "mean_active": sum(active) / len(steps),
+                "max_queue_depth": max(depth)}
+    return {"counters": serve, "steps": span}
+
+
+def render_serving_bench(payload: Dict[str, Any]) -> str:
+    """Render a BENCH_serving.json (benchmarks/loadgen) policy table."""
+    out = ["== serving benchmark (BENCH_serving.json) =="]
+    w = payload.get("workload", {})
+    out.append(f"  workload: {w.get('requests')} requests @ "
+               f"{w.get('qps')} req/s, {w.get('slots')} slots, "
+               f"seed {w.get('seed')}")
+    out.append(_fmt_table(
+        ["policy", "req/s", "tok/s", "p50_s", "p99_s", "steps",
+         "occupancy", "max_queue"],
+        [[r["policy"], f"{r['throughput_rps']:.3f}",
+          f"{r['throughput_tps']:.3f}", f"{r['latency_s']['p50']:.1f}",
+          f"{r['latency_s']['p99']:.1f}", str(r["steps"]),
+          f"{r['occupancy']['mean']:.0%}",
+          str(r["queue_depth"]["max"])]
+         for r in payload.get("rows", [])]))
+    acc = payload.get("acceptance", {})
+    if acc:
+        out.append(f"  continuous vs wave: "
+                   f"{acc.get('throughput_gain'):.2f}x throughput, "
+                   f"{acc.get('p99_ratio'):.2f}x p99 latency")
+    return "\n".join(out)
+
+
 def render(doc: Dict[str, Any]) -> str:
     out = []
     rows = mac_table(doc)
@@ -151,6 +199,18 @@ def render(doc: Dict[str, Any]) -> str:
               f"{s['max_us']:.1f}"] for s in ts]))
     else:
         out.append("(no spans in trace)")
+    sv = serving_summary(doc)
+    if sv["counters"] or sv["steps"]:
+        out.append("")
+        out.append("== serving runtime ==")
+        for k, v in sv["counters"].items():
+            out.append(f"  {k:<28s} {v}")
+        if sv["steps"]:
+            s = sv["steps"]
+            out.append(f"  serve.step: {s['steps']} steps, "
+                       f"{s['total_us']:.0f}us total, mean active "
+                       f"{s['mean_active']:.2f} slots, max queue "
+                       f"{s['max_queue_depth']}")
     return "\n".join(out)
 
 
@@ -168,6 +228,9 @@ def main(argv=None) -> int:
                          "or BENCH_trace.json)")
     ap.add_argument("--top", type=int, default=10,
                     help="span rows to show")
+    ap.add_argument("--serving", default="BENCH_serving.json",
+                    help="serving benchmark artifact to summarize when "
+                         "present (benchmarks/loadgen)")
     args = ap.parse_args(argv)
     try:
         doc = load_trace(args.trace)
@@ -177,6 +240,12 @@ def main(argv=None) -> int:
     print(f"trace: {args.trace} "
           f"({len(doc.get('traceEvents', []))} events)")
     print(render(doc))
+    try:
+        with open(args.serving) as fh:
+            print()
+            print(render_serving_bench(json.load(fh)))
+    except OSError:
+        pass  # no serving artifact around — trace-only report
     return 0
 
 

@@ -1,156 +1,77 @@
-"""Batched serving engine: prefill + streaming decode over the Model API.
+"""Legacy batched serving engines — thin compat wrappers over
+`repro.serve.runtime`.
 
-Static-batch continuous decoding (slot-based): requests occupy slots; a
-finished slot (EOS/max_len) is refilled from the queue at the next prefill
-opportunity. Weights may be packed sub-byte (QuantConfig mode='int') — the
-paper's deployment artifact; the KV cache may be int8 (kv_quant_bits=8).
+`Engine` (LM) and `VisionEngine` (quantized CNN) keep their public
+surface — ``generate``/``run``, ``utilization_report``,
+``artifact_bytes``, ``kernel_backends`` — but the wave/slot/stats
+machinery now lives exactly once in the runtime package: each shim is a
+`Scheduler` over the matching `WorkloadAdapter` pinned to
+``policy="wave"`` (admit only when every slot is free), which reproduces
+the synchronous fixed-wave semantics and per-device utilization these
+classes always had. Construct a `Scheduler` with the default
+``policy="continuous"`` instead to get mid-wave re-admission on the same
+adapters — same per-request outputs (bit-exact; see the runtime module
+docs), strictly better slot occupancy.
 
-**Cluster-parallel serving (paper fig. 9 analogy: one JAX mesh device ↔
-one core of the 8-core PULP cluster).** With ``mesh=`` the engine shards
-every request wave data-parallel over the mesh's ``dp_axis``: the wave's
-token/cache batch dim is laid out so device *d* owns the contiguous slot
-range ``[d*B/dp, (d+1)*B/dp)``, params are replicated across the mesh,
-and the jitted decode step runs SPMD — the serving analogue of the paper's
-cores each processing a disjoint slice of the im2col batch. The last wave
-of a ragged request list is padded to the full batch (pads never leak into
-results — tracked by ``n_real``), and the engine records, per wave, how
-many *real* slots each device carried; `utilization_report()` aggregates
-this into the per-device utilization the paper's fig. 9 reads off the
-cluster (idle cores == padded slots == lost speedup).
+Two legacy sharp edges are gone with the move:
 
-Sharding invariants for packed sub-byte params mirror
-`repro.parallel.sharding`: packed weight arrays ride along replicated here
-(wave DP), or pre-sharded over the output-feature axis by
-`shard_packed_linear`/`shard_packed_conv` when the kernel-level cluster
-path (`repro.kernels.api.qdot_sharded`) is in play — never sharded on the
-packed reduction axis.
+* ``batch_size % dp`` no longer has to be 0 — the slot manager pads the
+  physical array to the next dp multiple and never admits the pads, so
+  device blocks stay whole and ragged batches just cost idle-slot
+  utilization instead of a `ValueError`.
+* Ragged-prompt waves are no longer pad-contaminated: the old wave
+  prefill right-padded every prompt to the wave max and replayed the pad
+  zeros into short prompts' caches, so a request's output could depend
+  on its wave cohort. The runtime feeds each slot exactly its own
+  prompt; outputs are per-request properties, independent of batching.
+  (Equal-length prompts are unaffected — bit-identical to the old path.)
+
+Cluster-parallel serving (paper fig. 9 analogy: one JAX mesh device ↔
+one core of the 8-core PULP cluster): with ``mesh=`` the wave batch is
+sharded data-parallel over ``dp_axis``, params are replicated, and
+per-wave per-device real-slot utilization is recorded — an idle core is
+a padded slot. Packed sub-byte params ride along replicated (wave DP) or
+pre-sharded on output features by the kernel cluster path, never on the
+packed reduction axis (`repro.parallel.sharding` invariants).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
-from repro.obs import trace as obs
+from repro.serve.runtime.adapters import (LMDecodeAdapter, Request,
+                                          VisionAdapter)
+from repro.serve.runtime.scheduler import Scheduler, WaveStats
+
+# compat: tests and downstream code subclass/patch the stats mixin here
+_WaveStats = WaveStats
+
+__all__ = ["Engine", "Request", "VisionEngine", "_WaveStats"]
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray          # (S,) int32
-    max_new_tokens: int = 32
-    out: Optional[np.ndarray] = None
+class _WaveShim:
+    """Shared plumbing: expose the scheduler's wave-granular stats under
+    the legacy attribute/method names."""
 
+    _sched: Scheduler
 
-class _WaveStats:
-    """Per-wave per-device slot utilization + latency bookkeeping, shared
-    by the LM `Engine` and the CNN `VisionEngine`: device d owns the
-    contiguous slot range [d*B/dp, (d+1)*B/dp); real (unpadded) slots
-    fill from 0, so a padded slot is an idle cluster core (the fig. 9
-    readout).
+    @property
+    def wave_stats(self) -> List[dict]:
+        return self._sched.wave_stats
 
-    Each wave additionally records its wall-clock latency (stamped by
-    ``clock``, an instance-overridable callable so tests inject a
-    deterministic fake) and the request-queue depth at admission;
-    `utilization_report()` aggregates them into p50/p95/p99 latency and
-    queue-depth stats next to the slot-utilization columns."""
-
-    batch: int
-    _dp: int
-    clock = staticmethod(time.perf_counter)   # seconds; override in tests
-
-    def _record_wave(self, n_real: int, queue_depth: int = 0):
-        b_loc = self.batch // self._dp
-        per_dev = [min(max(n_real - d * b_loc, 0), b_loc) / b_loc
-                   for d in range(self._dp)]
-        self.wave_stats.append({"n_real": n_real, "batch": self.batch,
-                                "per_device": per_dev,
-                                "queue_depth": queue_depth,
-                                "t0": self.clock(), "latency_us": None})
-
-    def _finish_wave(self):
-        w = self.wave_stats[-1]
-        w["latency_us"] = (self.clock() - w.pop("t0")) * 1e6
-        obs.counter("engine.waves").add(1)
-        obs.counter("engine.requests").add(w["n_real"])
-        return w
+    @property
+    def _dp(self) -> int:
+        return self._sched._dp
 
     def utilization_report(self) -> dict:
-        """Aggregate per-device slot utilization, wave-latency
-        percentiles, and queue-depth stats across the waves served so
-        far — a device whose slots were padding did no useful work."""
-        if not self.wave_stats:
-            return {"devices": self._dp, "waves": 0, "mean_util": 0.0,
-                    "per_device": [0.0] * self._dp, "latency_us": None,
-                    "queue_depth": None, "occupancy_timeline": []}
-        per_dev = [float(np.mean([w["per_device"][d]
-                                  for w in self.wave_stats]))
-                   for d in range(self._dp)]
-        lats = [w["latency_us"] for w in self.wave_stats
-                if w.get("latency_us") is not None]
-        latency = None
-        if lats:
-            latency = {"p50": float(np.percentile(lats, 50)),
-                       "p95": float(np.percentile(lats, 95)),
-                       "p99": float(np.percentile(lats, 99)),
-                       "mean": float(np.mean(lats)),
-                       "max": float(np.max(lats)),
-                       "waves": len(lats)}
-        depths = [w.get("queue_depth", 0) for w in self.wave_stats]
-        return {"devices": self._dp, "waves": len(self.wave_stats),
-                "mean_util": float(np.mean(per_dev)),
-                "per_device": per_dev,
-                "latency_us": latency,
-                "queue_depth": {"mean": float(np.mean(depths)),
-                                "max": int(np.max(depths))},
-                # per-device real-slot occupancy over time, wave by wave
-                "occupancy_timeline": [list(w["per_device"])
-                                       for w in self.wave_stats]}
+        return self._sched.utilization_report()
 
-
-class Engine(_WaveStats):
-    def __init__(self, model: Model, params, batch_size: int,
-                 max_len: int, eos_id: int = 1, plan=None,
-                 mesh=None, dp_axis: str = "data"):
-        """`plan`: optional mixed-precision `PrecisionPlan` the params were
-        packed with (repro.deploy) — kept for introspection/reporting; the
-        packed shapes themselves already encode the per-layer bit-widths.
-
-        `mesh`: optional device mesh; request waves are sharded
-        data-parallel over `dp_axis` (batch_size must divide the axis so
-        every device owns whole slots), params are replicated, and
-        per-wave per-device slot utilization is recorded.
-        """
-        self.model = model
-        self.batch = batch_size
-        self.max_len = max_len
-        self.eos = eos_id
-        self.plan = plan
-        self.mesh = mesh
-        self.dp_axis = dp_axis
-        self.wave_stats: List[dict] = []
-        if mesh is not None:
-            from repro.parallel.sharding import cluster_axis_size
-            self._dp = cluster_axis_size(mesh, dp_axis)
-            if batch_size % self._dp != 0:
-                raise ValueError(
-                    f"batch_size={batch_size} must be divisible by mesh "
-                    f"axis {dp_axis!r} size {self._dp} so each device "
-                    "owns whole request slots")
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            params = jax.device_put(params, NamedSharding(mesh, P()))
-        else:
-            self._dp = 1
-        self.params = params
-        self._decode = jax.jit(model.decode)
-
-    def artifact_bytes(self) -> int:
-        from repro.nn.module import param_bytes
-        return param_bytes(self.params)
+    def serving_report(self) -> dict:
+        """Request-granular stats (new in the runtime; wave policy still
+        records per-request submit→finish latency)."""
+        return self._sched.serving_report()
 
     def kernel_backends(self) -> dict:
         """Resolved default backend per quantized op (repro.kernels.api) —
@@ -159,107 +80,49 @@ class Engine(_WaveStats):
         from repro.kernels import api
         return {op: api.default_backend(op) for op in api.OPS}
 
-    # ---------------------------------------------- wave sharding ----
 
-    def _put_wave(self, arr):
-        """Shard a wave-batched array (dim0 = slots) over the DP axis;
-        a mesh without that axis serves replicated (dp=1), matching the
-        kernel-level cluster path's pure-TP tolerance."""
-        if self.mesh is None:
-            return jnp.asarray(arr)
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.parallel.sharding import axis_entry
-        spec = P(axis_entry(self.mesh, self.dp_axis),
-                 *([None] * (np.ndim(arr) - 1)))
-        return jax.device_put(jnp.asarray(arr),
-                              NamedSharding(self.mesh, spec))
+class Engine(_WaveShim):
+    """Batched LM serving: prefill + streaming decode over the Model API
+    in synchronous fixed-size waves (see module docstring). Weights may
+    be packed sub-byte (QuantConfig mode='int'); the KV cache may be
+    int8 (kv_quant_bits=8)."""
 
-    def _put_cache(self, cache):
-        """Shard the decode cache's batch dim (layout-aware, see
-        `repro.parallel.sharding.cache_shardings`)."""
-        if self.mesh is None:
-            return cache
-        from repro.parallel.sharding import cache_shardings
-        return jax.device_put(cache, cache_shardings(cache, self.mesh))
+    def __init__(self, model: Model, params, batch_size: int,
+                 max_len: int, eos_id: int = 1, plan=None,
+                 mesh=None, dp_axis: str = "data"):
+        """`plan`: optional mixed-precision `PrecisionPlan` the params
+        were packed with (repro.deploy) — kept for introspection; the
+        packed shapes already encode the per-layer bit-widths.
 
-    # -------------------------------------------------- serving ----
+        `mesh`: optional device mesh; waves are sharded data-parallel
+        over `dp_axis` (any batch_size — ragged ones are padded to whole
+        per-device blocks), params are replicated."""
+        self.model = model
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos = eos_id
+        self.plan = plan
+        self.mesh = mesh
+        self.dp_axis = dp_axis
+        self._adapter = LMDecodeAdapter(model, params, max_len,
+                                        eos_id=eos_id, mesh=mesh,
+                                        dp_axis=dp_axis, plan=plan)
+        self.params = self._adapter.params
+        self._sched = Scheduler(self._adapter, batch_size, mesh=mesh,
+                                dp_axis=dp_axis, policy="wave")
 
-    def _prefill_scored(self, prompts):
-        """Prefill via teacher-forced forward, then replay tokens into the
-        decode cache (keeps one code path for cache layout)."""
-        cache = self._put_cache(
-            self.model.init_cache(self.batch, self.max_len))
-        max_p = max(len(p) for p in prompts)
-        toks = np.zeros((self.batch, max_p), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p
-        # replay prompt tokens through decode steps (slot-synchronous)
-        logits = None
-        for t in range(max_p):
-            logits, cache = self._decode(
-                self.params, cache, self._put_wave(toks[:, t:t + 1]),
-                jnp.int32(t))
-        return logits, cache, max_p
+    def artifact_bytes(self) -> int:
+        from repro.nn.module import param_bytes
+        return param_bytes(self.params)
 
     def generate(self, requests: List[Request], greedy: bool = True,
                  seed: int = 0) -> List[Request]:
-        """Serve a list of requests in fixed-size (mesh-sharded) waves."""
-        rng = np.random.default_rng(seed)
-        done: List[Request] = []
-        queue = list(requests)
-        while queue:
-            wave = queue[: self.batch]
-            queue = queue[self.batch:]
-            n_real = len(wave)  # pads below must never reach `done`
-            self._record_wave(n_real, queue_depth=len(queue))
-            with obs.span("engine.wave", cat="serve", n_real=n_real,
-                          batch=self.batch,
-                          queue_depth=len(queue)) as wave_span:
-                while len(wave) < self.batch:  # pad the last wave
-                    wave.append(Request(prompt=np.array([0], np.int32),
-                                        max_new_tokens=1))
-                prompts = [r.prompt for r in wave]
-                with obs.span("engine.prefill", cat="serve"):
-                    logits, cache, pos = self._prefill_scored(prompts)
-                outs = [[] for _ in wave]
-                alive = np.ones(self.batch, bool)
-                budget = np.array([r.max_new_tokens for r in wave])
-                step = 0
-                while alive.any() and pos + step < self.max_len and \
-                        step < budget.max():
-                    lg = np.asarray(logits[:, -1].astype(jnp.float32))
-                    if greedy:
-                        nxt = lg.argmax(-1).astype(np.int32)
-                    else:
-                        p = np.exp(lg - lg.max(-1, keepdims=True))
-                        p /= p.sum(-1, keepdims=True)
-                        nxt = np.array([rng.choice(lg.shape[-1], p=pi)
-                                        for pi in p], np.int32)
-                    for i in range(self.batch):
-                        if alive[i]:
-                            outs[i].append(int(nxt[i]))
-                            if nxt[i] == self.eos or \
-                                    len(outs[i]) >= budget[i]:
-                                alive[i] = False
-                    logits, cache = self._decode(
-                        self.params, cache, self._put_wave(nxt[:, None]),
-                        jnp.int32(pos + step))
-                    step += 1
-                for r, o in zip(wave, outs):
-                    r.out = np.array(o, np.int32)
-                # only the real requests of this wave — the old
-                # `max_new_tokens > 1 or out is not None` filter is always
-                # true once outputs are assigned, so pad fillers leaked into
-                # `done` and the final truncation could drop real requests
-                # behind them
-                done.extend(wave[:n_real])
-                w = self._finish_wave()
-                wave_span.set(decode_steps=step,
-                              latency_us=w["latency_us"])
-        return done
+        """Serve a list of requests in fixed-size (mesh-sharded) waves;
+        returns the same `Request` objects, in order, with `.out` set."""
+        return self._sched.serve(requests, greedy=greedy, seed=seed)
 
 
-class VisionEngine(_WaveStats):
+class VisionEngine(_WaveShim):
     """Batched quantized-CNN serving over fixed-size image waves.
 
     The CNN analogue of `Engine`: requests are images, a wave is a
@@ -267,65 +130,30 @@ class VisionEngine(_WaveStats):
     the net runs cluster-parallel (`repro.kernels.api` sharded entry
     points) with the wave's batch dim data-parallel over ``dp_axis`` —
     one mesh device ↔ one cluster core chewing its slice of the image
-    batch. The last ragged wave is padded to the full batch (pads never
-    reach results) and per-wave per-device real-slot utilization is
-    recorded exactly like the LM engine's.
+    batch. Ragged last waves (and ragged ``batch_size % dp``) are padded
+    with never-admitted slots; pads don't reach results.
     """
 
     def __init__(self, qnet, batch_size: int, mesh=None,
                  dp_axis: str = "data", backend: Optional[str] = None):
-        from repro.vision.models import forward_int
-
         self.qnet = qnet
         self.batch = batch_size
         self.mesh = mesh
         self.dp_axis = dp_axis
         self.backend = backend
-        self.wave_stats: List[dict] = []
-        if mesh is not None:
-            from repro.parallel.sharding import cluster_axis_size
-            self._dp = cluster_axis_size(mesh, dp_axis)
-            if batch_size % self._dp != 0:
-                raise ValueError(
-                    f"batch_size={batch_size} must be divisible by mesh "
-                    f"axis {dp_axis!r} size {self._dp} so each device "
-                    "owns whole image slots")
-        else:
-            self._dp = 1
-        self._forward = jax.jit(
-            lambda xh: forward_int(qnet, xh, backend=backend, mesh=mesh))
+        self._adapter = VisionAdapter(qnet, mesh=mesh, dp_axis=dp_axis,
+                                      backend=backend)
+        self._sched = Scheduler(self._adapter, batch_size, mesh=mesh,
+                                dp_axis=dp_axis, policy="wave")
 
     def artifact_bytes(self) -> int:
         from repro.vision.models import vision_artifact_bytes
         return vision_artifact_bytes(self.qnet)
 
-    def kernel_backends(self) -> dict:
-        from repro.kernels import api
-        return {op: api.default_backend(op) for op in api.OPS}
-
     def run(self, images) -> np.ndarray:
         """Real images (M, H, W, C) -> int32 logits (M, classes), served
         in mesh-sharded waves. Dequantize with ``qnet.eps_logits``."""
-        from repro.vision.models import quantize_input
-
         images = np.asarray(images, np.float32)
-        x_hat = np.asarray(quantize_input(self.qnet, images))
-        outs = []
-        for start in range(0, len(images), self.batch):
-            wave = x_hat[start:start + self.batch]
-            n_real = len(wave)
-            queued = max(len(images) - start - self.batch, 0)
-            self._record_wave(n_real, queue_depth=queued)
-            with obs.span("engine.wave", cat="serve", n_real=n_real,
-                          batch=self.batch,
-                          queue_depth=queued) as wave_span:
-                if n_real < self.batch:  # pad last wave; pads sliced off
-                    pad = np.zeros((self.batch - n_real, *wave.shape[1:]),
-                                   wave.dtype)
-                    wave = np.concatenate([wave, pad], axis=0)
-                logits = self._forward(jnp.asarray(wave))
-                outs.append(np.asarray(logits)[:n_real])
-                w = self._finish_wave()
-                wave_span.set(latency_us=w["latency_us"])
-        return (np.concatenate(outs, axis=0) if outs
-                else np.zeros((0, self.qnet.cfg.num_classes), np.int32))
+        if len(images) == 0:
+            return np.zeros((0, self.qnet.cfg.num_classes), np.int32)
+        return np.stack(self._sched.serve(list(images)))

@@ -79,9 +79,16 @@ def test_engine_wave_sharding_ragged():
     # device 0 busy, devices 1-3 idle; means are [1, .5, .5, .5]
     assert rep["per_device"] == [1.0, 0.5, 0.5, 0.5]
     assert abs(rep["mean_util"] - 0.625) < 1e-9
-    # batch that can't split into whole slots per device is rejected
-    with pytest.raises(ValueError, match="divisible"):
-        Engine(model, params, batch_size=3, max_len=32, mesh=mesh)
+    # ragged batch % dp: physical slots are padded to whole per-device
+    # blocks (pads never admitted) instead of the old ValueError —
+    # outputs still equal the meshless engine's
+    eng3 = Engine(model, params, batch_size=3, max_len=32, mesh=mesh)
+    reqs3 = mk()
+    got3 = eng3.generate(reqs3)
+    assert len(got3) == 5 and all(g is r for g, r in zip(got3, reqs3))
+    for g, w in zip(got3, want):
+        np.testing.assert_array_equal(g.out, w.out)
+    assert eng3.utilization_report()["devices"] == 4
     # a mesh without the dp axis serves replicated (pure-TP tolerance,
     # same as the kernel cluster path) rather than crashing mid-wave
     tp_mesh = jax.make_mesh((2,), ("model",), devices=jax.devices()[:2])

@@ -355,13 +355,25 @@ def test_vision_engine_waves_and_utilization(art):
     assert eng.artifact_bytes() == vision_artifact_bytes(qnet)
 
 
-def test_vision_engine_batch_divisibility():
+def test_vision_engine_ragged_batch_over_dp(art):
+    """batch_size % dp != 0 no longer raises: the slot array is padded
+    to whole per-device blocks and results still equal the meshless
+    forward (the pads never reach admission)."""
     from repro.serve.engine import VisionEngine
 
+    cfg, params, _, absmax, _ = art["resnet8"]
+    qnet = quantize_net(cfg, params, absmax)
+    rng = np.random.default_rng(5)
+    images = rng.uniform(0, 1, size=(5, *cfg.in_hw, cfg.in_ch)).astype(
+        np.float32)
     mesh = jax.make_mesh((4, 1), ("data", "model"),
                          devices=jax.devices()[:4])
-    with pytest.raises(ValueError, match="divisible"):
-        VisionEngine(qnet=None, batch_size=3, mesh=mesh)
+    eng = VisionEngine(qnet, batch_size=3, mesh=mesh, backend="xla")
+    got = eng.run(images)
+    want = np.asarray(forward_int(
+        qnet, quantize_input(qnet, images), backend="xla"))
+    assert np.array_equal(got, want)
+    assert eng.utilization_report()["devices"] == 4
 
 
 # ------------------------------------------------------------ CLI (slow) ---
