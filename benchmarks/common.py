@@ -48,7 +48,7 @@ def counted_time_call(fn, *args, warmup=1, iters=3):
 
 
 def emit(name, us, derived="", backend="", pipeline="", frac_of_peak=None,
-         macs_per_us=None, packed_bytes=None):
+         macs_per_us=None, packed_bytes=None, segment_bits=None):
     """`backend` names the kernel backend (repro.kernels.api) the row
     measured, so the perf trajectory can compare backends per row.
     `pipeline` names the kernel software-pipeline mode the row ran
@@ -57,7 +57,11 @@ def emit(name, us, derived="", backend="", pipeline="", frac_of_peak=None,
     carry them are the pipelined-vs-not roofline ladder (fig8).
     `macs_per_us`/`packed_bytes` are the counter-measured throughput and
     per-call packed traffic (`counted_time_call`) — measured, not
-    model-derived, so the roofline columns are auditable."""
+    model-derived, so the roofline columns are auditable.
+    `segment_bits` names the weight container widths the row's kernel
+    consumed, widest first and "|"-joined (e.g. "8" uniform, "8|2"
+    mixed-operand segmented) — rows that carry it are the fine-grain
+    mixed-precision ladder."""
     ROWS.append({"name": name, "us_per_call": round(float(us), 1),
                  "derived": str(derived), "backend": str(backend),
                  "pipeline": str(pipeline),
@@ -66,6 +70,8 @@ def emit(name, us, derived="", backend="", pipeline="", frac_of_peak=None,
                  "macs_per_us": (None if macs_per_us is None
                                  else round(float(macs_per_us), 2)),
                  "packed_bytes": (None if packed_bytes is None
-                                  else int(packed_bytes))})
+                                  else int(packed_bytes)),
+                 "segment_bits": (None if segment_bits is None
+                                  else str(segment_bits))})
     print(f"{name},{us:.1f},{derived},{backend},{pipeline},"
           f"{'' if frac_of_peak is None else f'{frac_of_peak:.4f}'}")

@@ -96,9 +96,66 @@ def _per_layer_rows(net, tag, qnet, x_hat, backend, rows):
             stream = y
 
 
+def _lm_planner_rows(rows, rng, backend):
+    """Fine-grain vs per-layer planner rows on the LM dense path.
+
+    The vision nets quantize per tensor (no segment support), so the
+    fine-grain comparison runs on the transformer zoo's smoke LM — the
+    one forward whose dense path consumes `PlanRule.segments` end to
+    end. The smoke config is widened to d_ff=384 so the MLP projections
+    span 3 channel groups (d_out=128 would degenerate to one group and
+    the best-of-both planner would return the layer plan verbatim).
+    Both plans run at the SAME auto budget; the row pair's
+    bytes_streamed delta is the fine-grain packing win."""
+    import dataclasses
+
+    from repro.configs.qwen2p5_3b import smoke_config
+    from repro.deploy.apply import (apply_plan, dense_inventory,
+                                    quantized_dense_paths)
+    from repro.deploy.calibrate import calibrate
+    from repro.models.api import Model
+    from repro.nn.layers import QuantConfig
+
+    cfg = dataclasses.replace(smoke_config(), d_model=128, d_ff=384)
+    fp = Model(cfg)
+    fp_params = fp.init(jax.random.PRNGKey(0))
+    seq = 16
+    batches = [rng.integers(2, cfg.vocab, size=(2, seq)).astype(np.int32)]
+    stats = calibrate(fp, fp_params, batches)
+    # a tight budget is where granularity pays: whole-layer demotions bust
+    # it, channel-group demotions fit (frac=0.5 admits every whole-layer
+    # move and the plans converge)
+    budget = auto_budget(stats, frac=0.12)
+    plans = [("planner-layer",
+              plan_mixed_precision(stats, budget, backend=backend,
+                                   granularity="layer")),
+             ("planner-fine",
+              plan_mixed_precision(stats, budget, backend=backend,
+                                   granularity="channel_group"))]
+    qint = QuantConfig(mode="int", w_bits=8, a_bits=8)
+    q0 = Model(dataclasses.replace(cfg, quant=qint))
+    inv = dense_inventory(fp_params, quantized_dense_paths(q0.defs()))
+    macs = sum(L * k * n for (L, k, n) in inv.values()) * seq
+    toks = jnp.asarray(batches[0])
+    for tag, plan in plans:
+        q = Model(dataclasses.replace(cfg, quant=qint, quant_plan=plan))
+        q_params = apply_plan(q.init(jax.random.PRNGKey(0)), fp_params, plan)
+        fn = jax.jit(lambda p, t, q=q: q.forward(p, {"tokens": t})[0])
+        us = time_call(fn, q_params, toks)
+        packed_b = plan.meta["packed_weight_bytes"]
+        n_seg = sum(1 for r in plan.rules if r.segments is not None)
+        rows.append({"name": f"e2e_qwen-smoke_{tag}_total_dev1",
+                     "net": "qwen-smoke", "layer": "total", "bits": tag,
+                     "devices": 1, "us_per_call": round(float(us), 1),
+                     "macs_per_image": macs, "bytes_streamed": packed_b})
+        emit(f"e2e_qwen-smoke_{tag}_total_dev1", us,
+             f"bytes={packed_b};segmented_rules={n_seg};macs={macs}",
+             backend or "default")
+
+
 def main(nets=("mobilenet-tiny", "resnet8"), bits_sweep=(8, 4, 2),
          devices=None, backend=None, json_path="BENCH_e2e.json",
-         smoke=False, per_layer=True):
+         smoke=False, per_layer=True, lm_planner=True):
     avail = len(jax.devices())
     if devices is None:
         devices = [d for d in (1, 2, 4, 8) if d <= avail]
@@ -156,6 +213,8 @@ def main(nets=("mobilenet-tiny", "resnet8"), bits_sweep=(8, 4, 2),
                      f"speedup={speedup:.2f};bytes={packed_b};"
                      f"proj_us_v5e={t_proj * 1e6:.3f}",
                      backend or "default")
+    if lm_planner:
+        _lm_planner_rows(rows, rng, backend)
     if json_path and rows:
         payload = {"version": 1, "batch": BATCH,
                    "path": "repro.vision.models.forward_int",
@@ -180,10 +239,14 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="smoke-size nets (CI/laptop)")
     ap.add_argument("--no-per-layer", action="store_true")
+    ap.add_argument("--no-lm-planner", action="store_true",
+                    help="skip the transformer fine-grain vs per-layer "
+                         "planner rows")
     args = ap.parse_args()
     main(nets=tuple(args.nets.split(",")),
          bits_sweep=tuple(int(b) for b in args.bits.split(",")),
          devices=(None if args.devices is None else
                   [int(v) for v in args.devices.split(",")]),
          backend=args.backend, json_path=args.json, smoke=args.smoke,
-         per_layer=not args.no_per_layer)
+         per_layer=not args.no_per_layer,
+         lm_planner=not args.no_lm_planner)

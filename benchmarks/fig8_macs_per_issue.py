@@ -41,15 +41,41 @@ BACKEND = "pallas_interpret"
 M, K, N = 256, 2048, 256
 
 
-def roofline(bits: int, pipelined: bool):
-    """(frac_of_peak, t_v5e_seconds) for the packed GEMM at ``bits``."""
+def roofline(bits: int, pipelined: bool, w_bytes=None):
+    """(frac_of_peak, t_v5e_seconds) for the packed GEMM at ``bits``
+    (activation width). ``w_bytes`` overrides the uniform-container
+    weight term — segmented containers stream their exact per-run byte
+    count (fine-grain mixed precision)."""
     macs = M * K * N
     t_cmp = 2 * macs / PEAK_FLOPS
     pf = packing.pack_factor(bits)
-    bytes_hbm = M * K // pf + K * N // pf + M * N   # packed x + w, int8 out
+    if w_bytes is None:
+        w_bytes = K * N // pf
+    bytes_hbm = M * K // pf + w_bytes + M * N      # packed x + w, int8 out
     t_mem = bytes_hbm / HBM_BW
     t = max(t_cmp, t_mem) if pipelined else t_cmp + t_mem
     return t_cmp / t, t
+
+
+def _mk_mixed_artifact(rng):
+    """Half-W8 / half-W2 segmented weights at the fig8 GEMM shape — the
+    mixed-operand kernel point of the ladder."""
+    from repro.core.packing import SegmentMap
+    from repro.core.quantize import quantize_linear_segmented
+
+    segmap = SegmentMap(((0, N // 2, 8), (N // 2, N, 2)))
+    w_hat = np.zeros((K, N), np.int8)
+    for s, e, b in segmap.runs:
+        lo, hi = packing.int_range(b, True)
+        w_hat[:, s:e] = rng.integers(lo, hi + 1, size=(K, e - s))
+    params = quantize_linear_segmented(
+        w_hat, segmap,
+        rng.integers(-127, 128, size=(N,)).astype(np.int32),
+        rng.integers(-2**18, 2**18, size=(N,)).astype(np.int32),
+        rng.integers(0, 2**15, size=(N,)).astype(np.int32),
+        a_bits=8, a_signed=True, d=18, out_bits=8)
+    x = rng.integers(-128, 128, size=(M, K)).astype(np.int8)
+    return params, packing.pack(x, 8, axis=-1)
 
 
 def main():
@@ -66,7 +92,26 @@ def main():
                  f"v5e_us={t_v5e * 1e6:.3f};macs={M * K * N}",
                  backend=BACKEND, pipeline=pipe, frac_of_peak=frac,
                  macs_per_us=counts["macs"] / us,
-                 packed_bytes=counts["packed_bytes"])
+                 packed_bytes=counts["packed_bytes"],
+                 segment_bits=str(bits))
+    # mixed-operand point: same shape, weights half W8 / half W2 — the
+    # per-N-tile unpack-width switch rides the same roofline with the
+    # weight term at the segmented containers' exact byte count
+    params, xp = _mk_mixed_artifact(rng)
+    w_bytes = params.segmap.packed_bytes(params.k_logical)
+    for pipe in ("off", "double_buffer"):
+        us, counts = counted_time_call(
+            lambda p=params, x=xp, pl=pipe: api.qdot_packed(
+                p, x, backend=BACKEND, pipeline=pl),
+            warmup=1, iters=2)
+        frac, t_v5e = roofline(8, pipelined=(pipe == "double_buffer"),
+                               w_bytes=w_bytes)
+        emit(f"fig8_w8w2_{pipe}", us,
+             f"v5e_us={t_v5e * 1e6:.3f};macs={M * K * N};"
+             f"w_bytes={w_bytes}",
+             backend=BACKEND, pipeline=pipe, frac_of_peak=frac,
+             macs_per_us=counts["macs"] / us,
+             packed_bytes=counts["packed_bytes"], segment_bits="8|2")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,8 @@ def payload_from_rows(rows) -> dict:
                         if r.get("macs_per_us") is not None},
         "packed_bytes": {r["name"]: r["packed_bytes"] for r in rows
                          if r.get("packed_bytes") is not None},
+        "segment_bits": {r["name"]: r["segment_bits"] for r in rows
+                         if r.get("segment_bits") is not None},
     }
 
 

@@ -61,6 +61,15 @@ _NUM = numbers.Real
 
 # ------------------------------------------------------ BENCH_kernels ---
 
+def _segment_bits_ok(v) -> bool:
+    """Widest-first "|"-joined container widths, e.g. "8", "8|2", "8|4|2"."""
+    parts = v.split("|")
+    widths = [int(p) for p in parts if p in ("8", "4", "2")]
+    return (len(widths) == len(parts) and len(parts) >= 1
+            and widths == sorted(widths, reverse=True)
+            and len(set(widths)) == len(widths))
+
+
 def validate_kernels(payload) -> None:
     """benchmarks/run.py payload: per-column dicts keyed by row name."""
     us = _need(payload, "us_per_call", dict, "$")
@@ -72,7 +81,8 @@ def validate_kernels(payload) -> None:
             ("pipeline", str, lambda v: v in PIPELINE_MODES),
             ("frac_of_peak", _NUM, lambda v: 0.0 <= v <= 1.0),
             ("macs_per_us", _NUM, lambda v: v >= 0),
-            ("packed_bytes", int, lambda v: v >= 0)):
+            ("packed_bytes", int, lambda v: v >= 0),
+            ("segment_bits", str, _segment_bits_ok)):
         d = _need(payload, col, dict, "$")
         for name, v in d.items():
             if name not in us:

@@ -51,10 +51,19 @@ def check_paper_map(errors: list):
     # raised by ISSUE-5 to include the network-level benchmark, by
     # ISSUE-6 to include the Mac&Load pipeline row: the autotune cache,
     # the differential harness, and the benchmark-artifact schema, by
-    # ISSUE-7 to include the observability subsystem, and by ISSUE-8 to
+    # ISSUE-7 to include the observability subsystem, by ISSUE-8 to
     # include the continuous-batching serving runtime and its load
-    # generator)
+    # generator, and by ISSUE-9 to include the fine-grain mixed-precision
+    # stack: segmented containers, the mixed-operand kernel wall, and the
+    # channel-group planner)
     required = {
+        "src/repro/core/packing.py",
+        "src/repro/core/quantize.py",
+        "src/repro/deploy/planner.py",
+        "src/repro/nn/layers.py",
+        "tests/test_segmented_packing.py",
+        "tests/test_mixed_operand_kernel.py",
+        "tests/test_deploy.py",
         "src/repro/serve/runtime/scheduler.py",
         "src/repro/serve/runtime/slots.py",
         "src/repro/serve/runtime/adapters.py",

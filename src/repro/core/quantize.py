@@ -223,6 +223,65 @@ class QuantizedLinearParams:
     k_logical: int         # pre-padding K
 
 
+@dataclasses.dataclass(frozen=True)
+class SegmentedLinearParams:
+    """Mixed-width deployable artifact: per-output-channel-run containers.
+
+    ``w_flat`` is a `packing.pack_segmented` buffer whose runs over the
+    output-feature axis are named by ``segmap`` (fine-grain mixed
+    precision, Nadalini et al. 2307.01056). Epilogue vectors span the full
+    N. `segment_params` views one run as a uniform
+    `QuantizedLinearParams` — running each segment through the uniform
+    kernel and concatenating along N is the mixed-operand kernel's
+    bit-exactness oracle (and the segment-looping xla/eager backends).
+    """
+
+    w_flat: jnp.ndarray    # (total_bytes,) int8, panel-major segmented
+    segmap: "packing.SegmentMap"
+    a_bits: int
+    a_signed: bool
+    kappa: jnp.ndarray     # (N,) int32
+    lam: jnp.ndarray       # (N,) int32
+    m: jnp.ndarray         # (N,) int32
+    d: int
+    out_bits: int
+    k_logical: int         # pre-padding K
+
+    @property
+    def n(self) -> int:
+        return self.segmap.n
+
+    def segment_params(self, index: int) -> QuantizedLinearParams:
+        s, e, b = self.segmap.runs[index]
+        return QuantizedLinearParams(
+            w_packed=packing.segment_packed(self.w_flat, self.segmap,
+                                            index, self.k_logical),
+            w_bits=b, a_bits=self.a_bits, a_signed=self.a_signed,
+            kappa=self.kappa[s:e], lam=self.lam[s:e], m=self.m[s:e],
+            d=self.d, out_bits=self.out_bits, k_logical=self.k_logical)
+
+
+def quantize_linear_segmented(w_hat, segmap, kappa, lam, m, *,
+                              a_bits: int, a_signed: bool, d: int,
+                              out_bits: int,
+                              assert_range: bool = False
+                              ) -> SegmentedLinearParams:
+    """Pack already-quantized int8 weight values (K, N) at per-run widths.
+
+    The integer-side companion of `quantize_linear` for segmented
+    containers: values must already sit on each run's ``w_bits`` grid
+    (``assert_range=True`` arms the truncation guard per run).
+    """
+    k_logical = int(w_hat.shape[-2])
+    return SegmentedLinearParams(
+        w_flat=packing.pack_segmented(w_hat, segmap,
+                                      assert_range=assert_range),
+        segmap=segmap, a_bits=a_bits, a_signed=a_signed,
+        kappa=jnp.asarray(kappa, jnp.int32), lam=jnp.asarray(lam, jnp.int32),
+        m=jnp.asarray(m, jnp.int32), d=d, out_bits=out_bits,
+        k_logical=k_logical)
+
+
 def quantize_linear(w, spec_w: QuantSpec, bn_scale, bn_bias,
                     spec_x: QuantSpec, spec_y: QuantSpec) -> QuantizedLinearParams:
     """Full deployment quantization of one linear layer (paper's pipeline)."""

@@ -8,14 +8,18 @@ armed — a mis-quantized value raises instead of corrupting the artifact.
 
 Per-dense math is `nn/layers.py::pack_dense_weights` (per-output-channel
 symmetric grids, chunk-planar packing), so a plan-converted layer is
-bit-exact against the uniform path at the same bit-width.
+bit-exact against the uniform path at the same bit-width. Rules with
+``segments`` (plan schema v4, fine-grain mixed precision) pack through
+`pack_dense_weights_segmented` into the flat segmented container the
+v4-built defs expect.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
 from repro.deploy.policy import PrecisionPlan
-from repro.nn.layers import QuantConfig, pack_dense_weights
+from repro.nn.layers import (QuantConfig, pack_dense_weights,
+                             pack_dense_weights_segmented)
 
 
 def _is_dense_q(node) -> bool:
@@ -32,12 +36,15 @@ def apply_plan(q_tree, fp_tree, plan: Optional[PrecisionPlan],
     stack. `plan=None` reproduces the uniform `default_w_bits` path."""
     if _is_dense_q(q_tree):
         path = "/".join(_path)
-        bits = default_w_bits
+        qcfg = QuantConfig(mode="int", w_bits=default_w_bits)
         if plan is not None:
-            bits = plan.resolve(path, QuantConfig(
-                mode="int", w_bits=default_w_bits)).w_bits
-        packed, scale = pack_dense_weights(fp_tree["w"], bits,
-                                           assert_range=assert_range)
+            qcfg = plan.resolve(path, qcfg)
+        if qcfg.segments is not None:
+            packed, scale = pack_dense_weights_segmented(
+                fp_tree["w"], qcfg.segments, assert_range=assert_range)
+        else:
+            packed, scale = pack_dense_weights(fp_tree["w"], qcfg.w_bits,
+                                               assert_range=assert_range)
         if packed.shape != q_tree["w_packed"].shape:
             raise ValueError(
                 f"{path}: packed shape {packed.shape} != def shape "

@@ -61,10 +61,33 @@ class CalibStats:
     sq_err: Dict[int, float] = dataclasses.field(default_factory=dict)
     sq_ref: float = 0.0
     taps: int = 0
+    # per-output-channel squared error, (d_out,) float64 per candidate
+    # bits — the fine-grain planner's channel-group demotion signal.
+    # Sums over channels to sq_err[b], so group sensitivities and the
+    # per-layer sens() share one normalization.
+    col_sq_err: Dict[int, np.ndarray] = dataclasses.field(
+        default_factory=dict)
 
     def sens(self, bits: int) -> float:
         """Relative output MSE at w_bits=bits (the planner's cost unit)."""
         return self.sq_err.get(bits, 0.0) / (self.sq_ref + 1e-12)
+
+    def col_sens(self, bits: int) -> Optional[np.ndarray]:
+        """(d_out,) per-output-channel relative MSE at w_bits=bits, on the
+        same normalization as `sens` (so it sums to ~sens(bits)); None
+        when the calibration pass didn't record channel detail."""
+        cols = self.col_sq_err.get(bits)
+        if cols is None:
+            return None
+        return np.asarray(cols, np.float64) / (self.sq_ref + 1e-12)
+
+    def _add_col_err(self, bits: int, err):
+        """Accumulate one tap's per-channel squared error (err: (..., N))."""
+        cols = np.asarray(
+            jnp.sum(jnp.asarray(err, jnp.float32) ** 2,
+                    axis=tuple(range(err.ndim - 1))), np.float64)
+        prev = self.col_sq_err.get(bits)
+        self.col_sq_err[bits] = cols if prev is None else prev + cols
 
 
 def _sim_int_dense(x, w, w_bits: int, a_bits: int, a_absmax: float):
@@ -124,6 +147,7 @@ class _Collector:
             y_q = _sim_int_dense(x2, wf, b, self.a_bits, absmax)
             err = y_q - y_ref
             st.sq_err[b] = st.sq_err.get(b, 0.0) + float(jnp.sum(err * err))
+            st._add_col_err(b, err)
         st.taps += 1
 
 
@@ -165,6 +189,7 @@ def _weight_only(stats: Dict[str, CalibStats], fp_params, bits, a_absmax):
             w_hat, scale = quantize_dense_weights(w2, b)
             err = w_hat.astype(jnp.float32) * scale - w2
             st.sq_err[b] = st.sq_err.get(b, 0.0) + float(jnp.sum(err * err))
+            st._add_col_err(b, err)
         st.taps += 1
 
 
@@ -289,6 +314,7 @@ class _ConvCollector:
                                     groups=g["groups"])
             err = y_q - y_ref
             st.sq_err[b] = st.sq_err.get(b, 0.0) + float(jnp.sum(err * err))
+            st._add_col_err(b, err)
         st.taps += 1
 
 

@@ -11,15 +11,21 @@ whole depth — exactly the granularity at which packed shapes must stay
 uniform for `jax.lax.scan`.
 
 Plans are frozen/hashable (they ride inside the frozen `ModelConfig`) and
-round-trip through JSON (`save_plan`/`load_plan`). Schema v3 adds the
-per-rule ``pipeline`` field (kernel software-pipeline mode, the Mac&Load
-knob — see `repro.kernels.common.PIPELINE_MODES`); v2 plans (``backend``
-but no ``pipeline``) load unchanged with pipeline=None (resolve at run
-time). v1 plans (the pre-registry ``use_kernel`` boolean) load with a
-single DeprecationWarning and map True -> 'pallas_interpret', False ->
-'xla' (the booleans were explicit path pins; the same mapping every shim
-uses) — re-save (e.g. via ``repro.launch.deploy --from-plan``) to upgrade
-the artifact.
+round-trip through JSON (`save_plan`/`load_plan`). Schema v4 adds the
+per-rule ``segments`` field — fine-grain mixed precision (Nadalini et al.
+2307.01056): ordered (n_start, n_end, w_bits) runs over the layer's
+output-feature axis, validated through `packing.SegmentMap`
+(CHUNK-aligned interior boundaries), with the rule's ``w_bits`` equal to
+the widest run; v1–v3 plans load clean with segments=None (uniform).
+Schema v3 added the per-rule ``pipeline`` field (kernel
+software-pipeline mode, the Mac&Load knob — see
+`repro.kernels.common.PIPELINE_MODES`); v2 plans (``backend`` but no
+``pipeline``) load unchanged with pipeline=None (resolve at run time).
+v1 plans (the pre-registry ``use_kernel`` boolean) load with a single
+DeprecationWarning and map True -> 'pallas_interpret', False -> 'xla'
+(the booleans were explicit path pins; the same mapping every shim uses)
+— re-save (e.g. via ``repro.launch.deploy --from-plan``) to upgrade the
+artifact.
 """
 from __future__ import annotations
 
@@ -30,10 +36,11 @@ import pathlib
 import warnings
 from typing import Optional, Tuple
 
+from repro.core import packing
 from repro.kernels.common import check_pipeline
 from repro.nn.layers import QuantConfig
 
-PLAN_VERSION = 3
+PLAN_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +53,12 @@ class PlanRule:
     backend: Optional[str] = None      # kernel backend (repro.kernels.api)
     a_absmax: Optional[float] = None   # calibrated static activation absmax
     pipeline: Optional[str] = None     # kernel pipeline mode (Mac&Load knob)
+    # Fine-grain mixed precision (schema v4): (n_start, n_end, w_bits)
+    # runs over the matched layer's output-feature axis; None -> uniform
+    # w_bits. Validated via packing.SegmentMap; the rule's w_bits must be
+    # the widest run width (so coarse consumers that only read w_bits
+    # never under-provision).
+    segments: Optional[Tuple[Tuple[int, int, int], ...]] = None
     # DEPRECATION SHIM: pre-registry boolean; normalized to None in
     # __post_init__ after mapping onto `backend`.
     use_kernel: Optional[bool] = None
@@ -53,6 +66,15 @@ class PlanRule:
     def __post_init__(self):
         if self.pipeline is not None:
             check_pipeline(self.pipeline)
+        if self.segments is not None:
+            sm = packing.SegmentMap(
+                tuple(tuple(r) for r in self.segments))
+            widest = max(b for _, _, b in sm.runs)
+            if self.w_bits != widest:
+                raise ValueError(
+                    f"rule w_bits={self.w_bits} must equal the widest "
+                    f"segment width {widest} (runs: {sm.runs})")
+            object.__setattr__(self, "segments", sm.runs)
         if self.use_kernel is not None:
             if self.backend is not None:
                 raise ValueError(
@@ -93,16 +115,20 @@ class PrecisionPlan:
         r = self.rule_for(path)
         if r is None:
             return dataclasses.replace(
-                base, w_bits=self.default_w_bits, a_bits=self.default_a_bits)
+                base, w_bits=self.default_w_bits, a_bits=self.default_a_bits,
+                segments=None)
         return dataclasses.replace(
             base, w_bits=r.w_bits, a_bits=r.a_bits,
             backend=r.backend if r.backend is not None else base.backend,
             a_absmax=r.a_absmax if r.a_absmax is not None else base.a_absmax,
-            pipeline=r.pipeline if r.pipeline is not None else base.pipeline)
+            pipeline=r.pipeline if r.pipeline is not None else base.pipeline,
+            segments=r.segments)
 
     def distinct_w_bits(self) -> Tuple[int, ...]:
+        seg = {b for r in self.rules if r.segments
+               for _, _, b in r.segments}
         return tuple(sorted({r.w_bits for r in self.rules}
-                            | {self.default_w_bits}))
+                            | {self.default_w_bits} | seg))
 
     # ------------------------------------------------------------- json ---
 
@@ -115,6 +141,8 @@ class PrecisionPlan:
                 "pattern": r.pattern, "w_bits": r.w_bits, "a_bits": r.a_bits,
                 "backend": r.backend, "a_absmax": r.a_absmax,
                 "pipeline": r.pipeline,
+                "segments": (None if r.segments is None
+                             else [list(run) for run in r.segments]),
             } for r in self.rules],
             "meta": self.meta,
         }, indent=2, sort_keys=True)
@@ -123,7 +151,7 @@ class PrecisionPlan:
     def from_json(text: str) -> "PrecisionPlan":
         d = json.loads(text)
         version = d.get("version")
-        if version not in (1, 2, PLAN_VERSION):
+        if version not in (1, 2, 3, PLAN_VERSION):
             raise ValueError(f"unsupported plan version {version}")
         raw_rules = d.get("rules", [])
         if version == 1 or any("use_kernel" in r for r in raw_rules):
@@ -146,6 +174,9 @@ class PrecisionPlan:
             a_absmax=(None if r.get("a_absmax") is None
                       else float(r["a_absmax"])),
             pipeline=r.get("pipeline"),   # absent in v1/v2 -> None
+            segments=(None if r.get("segments") is None
+                      else tuple(tuple(int(v) for v in run)
+                                 for run in r["segments"])),  # v1–v3 -> None
         ) for r in raw_rules)
         default = d.get("default", {})
         return PrecisionPlan(

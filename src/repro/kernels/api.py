@@ -71,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing
+from repro.core.quantize import SegmentedLinearParams
 from repro.kernels import tune
 from repro.kernels.common import (PIPELINE_MODES, apply_epilogue,
                                   check_pipeline, round_up)
@@ -78,7 +79,10 @@ from repro.obs import counters as obs_counters
 from repro.obs import env as obsenv
 from repro.obs import trace as obs
 
-OPS = ("qdot", "qconv")
+# "qdot_mixed" is the fine-grain mixed-precision GEMM (segmented weight
+# containers, per-tile unpack width — Nadalini et al. 2307.01056); qdot
+# routes into it when params is a SegmentedLinearParams.
+OPS = ("qdot", "qdot_mixed", "qconv")
 ENV_VAR = "REPRO_QBACKEND"
 ENV_PIPELINE = "REPRO_QPIPELINE"
 # capability-ordered default resolution; backends not listed here (the
@@ -310,15 +314,18 @@ def _resolve_call(op: str, shape, a_bits: int, w_bits: int, *,
 
 
 def _run_counted(spec, op: str, shape, a_bits: int, w_bits: int,
-                 pipeline: str, thunk):
+                 pipeline: str, thunk, w_packed_bytes: Optional[int] = None):
     """Run the resolved backend. With observability on, bump the
     (op, bits, backend, pipeline) MAC/byte counters and wrap the run in
     a ``cat='kernel'`` span that blocks on the result so device time
-    lands inside it; off, it's a bare call."""
+    lands inside it; off, it's a bare call. ``w_packed_bytes`` overrides
+    the uniform-container weight-byte estimate (segmented containers
+    stream fewer bytes than a uniform buffer at the widest width)."""
     if not obs.enabled():
         return thunk()
     costs = obs_counters.record(op, shape, a_bits, w_bits,
-                                backend=spec.name, pipeline=pipeline)
+                                backend=spec.name, pipeline=pipeline,
+                                w_packed_bytes=w_packed_bytes)
     with obs.span(op, cat="kernel", backend=spec.name, pipeline=pipeline,
                   a_bits=int(a_bits), w_bits=int(w_bits),
                   shape=tuple(int(s) for s in shape),
@@ -334,13 +341,22 @@ def qdot(params, x_hat, *, epilogue: str = "int", scale=1.0,
          dp_axis: str = "data", tp_axis: str = "model"):
     """Quantized dot: integer-image activations x packed weights.
 
-    params: `QuantizedLinearParams`. x_hat: (..., K_logical) int8 integer
-    images (unpacked); padded to CHUNK and packed on the fly. Leading dims
-    are flattened for the GEMM and restored on the output. With ``mesh=``
-    the call routes through `qdot_sharded` (cluster-parallel execution).
-    ``pipeline`` selects the kernel execution mode (module docstring).
+    params: `QuantizedLinearParams` — or `SegmentedLinearParams`, which
+    routes through the mixed-operand op ``qdot_mixed`` (per-segment
+    weight widths, same backend names). x_hat: (..., K_logical) int8
+    integer images (unpacked); padded to CHUNK and packed on the fly.
+    Leading dims are flattened for the GEMM and restored on the output.
+    With ``mesh=`` the call routes through `qdot_sharded`
+    (cluster-parallel execution). ``pipeline`` selects the kernel
+    execution mode (module docstring).
     """
     if mesh is not None:
+        if isinstance(params, SegmentedLinearParams):
+            raise NotImplementedError(
+                "qdot(mesh=...) does not take SegmentedLinearParams yet: "
+                "segment boundaries and the TP output-feature split would "
+                "have to be co-aligned; shard per segment above the "
+                "registry instead")
         return qdot_sharded(params, x_hat, mesh=mesh, dp_axis=dp_axis,
                             tp_axis=tp_axis, epilogue=epilogue, scale=scale,
                             backend=backend, block=block, pipeline=pipeline,
@@ -360,7 +376,27 @@ def qdot_packed(params, x_packed, *, epilogue: str = "int", scale=1.0,
                 pipeline: Optional[str] = None,
                 plan_hints: Optional[dict] = None):
     """`qdot` over already-packed activations (fused chains where the
-    previous layer's epilogue emitted packed integer images)."""
+    previous layer's epilogue emitted packed integer images).
+
+    `SegmentedLinearParams` dispatches to the ``qdot_mixed`` registry op:
+    same backend names, but the pallas kernel switches unpack width per
+    N tile and the xla/eager backends loop segments. The resolution/tune
+    key uses the widest segment width (containers at mixed widths share
+    one cache row per widest width)."""
+    if isinstance(params, SegmentedLinearParams):
+        m = x_packed.shape[0]
+        k = x_packed.shape[1] * packing.pack_factor(params.a_bits)
+        n = params.segmap.n
+        w_key = params.segmap.widths()[0]   # widest width present
+        spec, block, pipeline = _resolve_call(
+            "qdot_mixed", (m, k, n), params.a_bits, w_key,
+            backend=backend, block=block, pipeline=pipeline,
+            plan_hints=plan_hints)
+        return _run_counted(
+            spec, "qdot_mixed", (m, k, n), params.a_bits, w_key, pipeline,
+            lambda: spec.run(params, x_packed, epilogue=epilogue,
+                             scale=scale, block=block, pipeline=pipeline),
+            w_packed_bytes=params.segmap.packed_bytes(params.k_logical))
     m = x_packed.shape[0]
     k = x_packed.shape[1] * packing.pack_factor(params.a_bits)
     n = params.w_packed.shape[1]
@@ -649,6 +685,98 @@ def _qdot_eager_run(params, x_packed, *, epilogue, scale, block=None,
     return jnp.asarray(out).astype(dtype)
 
 
+# -------------------------------------------------- qdot_mixed backends ---
+
+def _qdot_mixed_pallas(params, x_packed, *, epilogue, scale, block,
+                       pipeline: str, interpret: bool):
+    """Mixed-operand Pallas path: zero-pad the ragged tail panel of the
+    segmented container to a full CHUNK (`pad_segmented` — the artifact
+    itself stays exact-bytes), pad M to the block multiple, run
+    `qmatmul_segmented`, slice back."""
+    from repro.kernels.common import LANE, segmented_default_block
+    from repro.kernels.qmatmul.kernel import qmatmul_segmented
+
+    if np.ndim(scale) > 0:
+        raise NotImplementedError(
+            "pallas qdot_mixed: scalar scale only (like the uniform "
+            "kernel); use backend='xla' for per-channel dequant scales")
+    m = x_packed.shape[0]
+    k_pad = x_packed.shape[1] * packing.pack_factor(params.a_bits)
+    n = params.segmap.n
+    w_flat, segmap_p = packing.pad_segmented(
+        params.w_flat, params.segmap, params.k_logical)
+    if block is None:
+        bm, bk = segmented_default_block(m, k_pad, params.a_bits,
+                                         params.segmap.widths())
+    else:
+        bm, bk = block[0], block[2]
+    bm = min(bm, round_up(m, 32))
+    xp = _pad_axis(x_packed, bm, 0)
+    kappa = _pad_axis(params.kappa, LANE, 0)
+    lam = _pad_axis(params.lam, LANE, 0)
+    mm = _pad_axis(params.m, LANE, 0)
+    out = qmatmul_segmented(
+        xp, w_flat, segmap_p, kappa, lam, mm, k_logical=params.k_logical,
+        a_bits=params.a_bits, a_signed=params.a_signed, d=params.d,
+        out_bits=params.out_bits, epilogue=epilogue, scale=scale,
+        block=(bm, LANE, bk), pipeline=pipeline, interpret=interpret)
+    return out[:m, :n]
+
+
+def _qdot_mixed_pallas_run(params, x_packed, *, epilogue, scale, block=None,
+                           pipeline: str = "off"):
+    _require_tpu("pallas")
+    return _qdot_mixed_pallas(params, x_packed, epilogue=epilogue,
+                              scale=scale, block=block, pipeline=pipeline,
+                              interpret=False)
+
+
+def _qdot_mixed_interpret_run(params, x_packed, *, epilogue, scale,
+                              block=None, pipeline: str = "off"):
+    return _qdot_mixed_pallas(params, x_packed, epilogue=epilogue,
+                              scale=scale, block=block, pipeline=pipeline,
+                              interpret=True)
+
+
+def _qdot_mixed_xla_run(params, x_packed, *, epilogue, scale, block=None,
+                        pipeline: str = "off"):
+    """Segment-looping XLA fallback: each run is a uniform container view
+    (`segment_packed`), so each goes through `xla_int_gemm` with its own
+    width and epilogue slice; outputs concatenate along N."""
+    del block, pipeline
+    x = packing.unpack(x_packed, params.a_bits, params.a_signed, axis=-1)
+    outs = []
+    for i, (s, e, b) in enumerate(params.segmap.runs):
+        sp = params.segment_params(i)
+        sc = scale if np.ndim(scale) == 0 else scale[..., s:e]
+        outs.append(xla_int_gemm(
+            x, sp.w_packed, w_bits=b, kappa=sp.kappa, lam=sp.lam,
+            m_mul=sp.m, d=sp.d, out_bits=sp.out_bits, epilogue=epilogue,
+            scale=sc))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def _qdot_mixed_eager_run(params, x_packed, *, epilogue, scale, block=None,
+                          pipeline: str = "off"):
+    del block, pipeline
+    from repro.kernels.qmatmul.ref import qmatmul_ref
+
+    if np.ndim(scale) > 0:
+        raise NotImplementedError("eager_ref qdot_mixed: scalar scale only")
+    outs = []
+    for i in range(len(params.segmap.runs)):
+        sp = params.segment_params(i)
+        outs.append(qmatmul_ref(
+            np.asarray(x_packed), np.asarray(sp.w_packed),
+            np.asarray(sp.kappa), np.asarray(sp.lam), np.asarray(sp.m),
+            a_bits=sp.a_bits, a_signed=sp.a_signed, w_bits=sp.w_bits,
+            d=sp.d, out_bits=sp.out_bits, epilogue=epilogue,
+            scale=float(scale)))
+    dtype = {"int": jnp.int8, "dequant": jnp.bfloat16,
+             "raw": jnp.int32}[epilogue]
+    return jnp.asarray(np.concatenate(outs, axis=-1)).astype(dtype)
+
+
 # ------------------------------------------------------- qconv backends ---
 
 def _conv_fits_vmem(shape, a_bits, w_bits) -> bool:
@@ -754,6 +882,18 @@ register("qdot", "xla", supports=_always, run=_qdot_xla_run,
          doc="XLA-native unpack + int dot_general + fused epilogue")
 register("qdot", "eager_ref", supports=_always, run=_qdot_eager_run,
          doc="independent numpy oracle (bit-exactness baseline)")
+
+register("qdot_mixed", "pallas", supports=_on_tpu,
+         run=_qdot_mixed_pallas_run,
+         doc="mixed-operand segmented GEMM kernel (per-tile unpack width)")
+register("qdot_mixed", "pallas_interpret", supports=_always,
+         run=_qdot_mixed_interpret_run,
+         doc="mixed-operand kernel under the Pallas interpreter")
+register("qdot_mixed", "xla", supports=_always, run=_qdot_mixed_xla_run,
+         doc="segment-looping XLA fallback (uniform int GEMM per run)")
+register("qdot_mixed", "eager_ref", supports=_always,
+         run=_qdot_mixed_eager_run,
+         doc="segment-looping numpy oracle (uniform ref GEMM per run)")
 
 register("qconv", "pallas",
          supports=lambda s, a, w, p: p == "tpu" and _conv_fits_vmem(s, a, w),

@@ -178,12 +178,71 @@ def default_block(m, n, k, a_bits, w_bits,
         return gemm_working_set(bm, bn, bk, a_bits, w_bits) <= vmem_budget
 
     while not fits(bm, bn, bk) and bk > packing.CHUNK:
-        bk //= 2
+        bk = align(bk // 2, packing.CHUNK)
     while not fits(bm, bn, bk) and bn > LANE:
-        bn //= 2
+        bn = align(bn // 2, LANE)
     while not fits(bm, bn, bk) and bm > SUBLANE_I8:
-        bm //= 2
+        bm = align(bm // 2, SUBLANE_I8)
     return bm, bn, bk
+
+
+def segmented_bk(k_pad: int, target: int) -> int:
+    """Largest CHUNK-multiple divisor of ``k_pad`` that is <= ``target``.
+
+    The mixed-operand kernel loops K inside the grid step with manual DMA
+    at per-width static sizes, so its K tile must divide the padded
+    contraction exactly (no ragged tail inside the kernel — raggedness is
+    handled by container zero-padding at the wrapper).
+    """
+    if k_pad % packing.CHUNK:
+        raise ValueError(f"k_pad={k_pad} not a CHUNK multiple")
+    c = k_pad // packing.CHUNK
+    best = 1
+    for t in range(1, c + 1):
+        if c % t == 0 and t * packing.CHUNK <= target:
+            best = t
+    return best * packing.CHUNK
+
+
+def segmented_working_set(bm, k_pad, bk, a_bits, widths) -> int:
+    """VMEM bytes of one mixed-operand GEMM tile.
+
+    The activation block holds the full packed K row panel (K loops inside
+    the kernel); the weight side is two manual-DMA slots sized for the
+    widest width present (widest => most container bytes per K tile);
+    epilogue params and the out tile are grid-pipelined (2x); the int32
+    accumulator persists across the K loop.
+    """
+    pf_a = packing.pack_factor(a_bits)
+    pf_min = min(packing.pack_factor(b) for b in widths)
+    x_b = bm * (k_pad // pf_a)
+    w_slots = 2 * (bk // pf_min) * LANE
+    params = 3 * LANE * 4
+    out = bm * LANE * 4
+    acc = bm * LANE * 4
+    return 2 * (x_b + params + out) + w_slots + acc
+
+
+def segmented_default_block(m, k_pad, a_bits, widths,
+                            vmem_budget: int = 8 * 1024 * 1024):
+    """Pick (bm, bk) for the mixed-operand kernel (bn is pinned to LANE:
+    one N tile == one CHUNK column panel, so a tile never straddles a
+    segment boundary)."""
+    def align(v, unit):
+        return max(unit, (v // unit) * unit)
+
+    bm = align(min(m, 256), SUBLANE_I8)
+    bk = segmented_bk(k_pad, min(k_pad, 1024))
+
+    def fits(bm, bk):
+        return segmented_working_set(
+            bm, k_pad, bk, a_bits, widths) <= vmem_budget
+
+    while not fits(bm, bk) and bk > packing.CHUNK:
+        bk = segmented_bk(k_pad, bk // 2)
+    while not fits(bm, bk) and bm > SUBLANE_I8:
+        bm //= 2
+    return bm, bk
 
 
 def conv_working_set(bho, bn, *, ho, wo, cout, fh, fw, cin_pad, stride,

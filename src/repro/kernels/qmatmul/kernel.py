@@ -49,7 +49,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import packing
 from repro.kernels.common import (EPILOGUE_DTYPES, apply_epilogue,
                                   check_pipeline, compiler_params,
-                                  default_block, matmul_planes)
+                                  default_block, matmul_planes,
+                                  segmented_bk, segmented_default_block)
 
 # Back-compat re-exports: these lived here before the kernels/common split.
 from repro.kernels.common import (LANE, SUBLANE_I8,  # noqa: F401
@@ -159,8 +160,17 @@ def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
     if block is None:
         block = default_block(mdim, n, k, a_bits, w_bits)
     bm, bn, bk = block
-    assert k % bk == 0 and bk % packing.CHUNK == 0, (k, bk)
+    assert bk % packing.CHUNK == 0, (k, bk)
     assert mdim % bm == 0 and n % bn == 0, (mdim, n, bm, bn)
+    if k % bk:
+        # Ragged final K tile: zero-pad both packed operands to the next
+        # bk multiple. Zero containers hold zero in every plane (signed or
+        # not), so the extra MACs contribute nothing — exact in both
+        # pipeline modes, and tuned bk choices aren't limited to divisors.
+        k_fit = k + bk - k % bk
+        x = jnp.pad(x, ((0, 0), (0, (k_fit - k) // pf_a)))
+        w_packed = jnp.pad(w_packed, ((0, (k_fit - k) // pf_w), (0, 0)))
+        k = k_fit
     nk = k // bk
 
     if out_dtype is None:
@@ -219,3 +229,163 @@ def qmatmul_packed(x, w_packed, kappa, lam, m_mul, *,
         interpret=interpret,
     )(x, w_packed, kappa.reshape(1, -1), lam.reshape(1, -1),
       m_mul.reshape(1, -1))
+
+
+def _qmatmul_segmented_kernel(code_ref, off_ref, x_ref, kappa_ref, lam_ref,
+                              m_ref, w_hbm, o_ref, w_buf, sems, acc_ref,
+                              *, nk: int, bk: int, widths, a_bits: int,
+                              a_signed: bool, d: int, out_bits: int,
+                              epilogue: str, scale: float, pipeline: str):
+    """Mixed-operand GEMM tile (fine-grain mixed precision, 2307.01056).
+
+    One grid step owns one (bm, LANE) output tile. The weight panel for
+    N-tile j lives at byte offset ``off_ref[j]`` in the flat segmented
+    buffer, packed at width ``widths[code_ref[j]]`` — both scalars arrive
+    via prefetch, so the kernel picks its DMA size and planar unpack
+    width per tile with a `jax.lax.switch` over the (static) width set.
+    K loops inside the kernel: panel-major layout makes tile kk of the
+    panel the contiguous byte range [off + kk*sz, off + (kk+1)*sz).
+    """
+    j = pl.program_id(1)
+    code = code_ref[j]
+    base = off_ref[j]
+    pf_a = packing.pack_factor(a_bits)
+    bka = bk // pf_a
+    sizes = [bk // packing.pack_factor(b) * LANE for b in widths]
+
+    def dma(slot, kk, wi):
+        sz = sizes[wi]
+        return pltpu.make_async_copy(
+            w_hbm.at[pl.dslice(base + kk * sz, sz)],
+            w_buf.at[slot, pl.dslice(0, sz)], sems.at[slot])
+
+    def start(slot, kk):
+        jax.lax.switch(code, [
+            (lambda wi=wi: dma(slot, kk, wi).start())
+            for wi in range(len(widths))])
+
+    def wait(slot, kk):
+        jax.lax.switch(code, [
+            (lambda wi=wi: dma(slot, kk, wi).wait())
+            for wi in range(len(widths))])
+
+    def tile_dot(slot, kk):
+        xb = x_ref[:, pl.dslice(kk * bka, bka)]
+
+        def dot_at(wi):
+            rows = bk // packing.pack_factor(widths[wi])
+            wb = w_buf[slot, pl.dslice(0, rows * LANE)].reshape(rows, LANE)
+            return matmul_planes(xb, wb, a_bits, a_signed, widths[wi])
+
+        return jax.lax.switch(code, [
+            (lambda wi=wi: dot_at(wi)) for wi in range(len(widths))])
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    if pipeline == "double_buffer":
+        start(0, 0)
+
+        def body(kk, carry):
+            cur = jax.lax.rem(kk, 2)
+            nxt = jax.lax.rem(kk + 1, 2)
+
+            @pl.when(kk + 1 < nk)
+            def _prefetch():    # next K tile's DMA rides behind this dot
+                start(nxt, kk + 1)
+
+            wait(cur, kk)
+            acc_ref[...] += tile_dot(cur, kk)
+            return carry
+    else:
+
+        def body(kk, carry):
+            start(0, kk)
+            wait(0, kk)
+            acc_ref[...] += tile_dot(0, kk)
+            return carry
+
+    jax.lax.fori_loop(0, nk, body, 0)
+    o_ref[...] = apply_epilogue(
+        acc_ref[...], kappa_ref[...], lam_ref[...], m_ref[...],
+        d=d, out_bits=out_bits, epilogue=epilogue, scale=scale,
+        out_dtype=o_ref.dtype)
+
+
+def qmatmul_segmented(x, w_flat, segmap, kappa, lam, m_mul, *,
+                      k_logical: int, a_bits: int, a_signed: bool,
+                      d: int, out_bits: int, epilogue: str = "int",
+                      scale: float = 1.0,
+                      block: Optional[tuple] = None,
+                      out_dtype=None,
+                      pipeline: str = "off",
+                      interpret: bool = False):
+    """Mixed-operand packed GEMM over a segmented weight container.
+
+    x: (M, K_pad/pf_a) packed activations; w_flat: a flat
+    `packing.pack_segmented` buffer (panel-major) whose N must be a
+    CHUNK/LANE multiple — callers `packing.pad_segmented` first. The grid
+    is (M/bm, N/LANE): each N tile is exactly one CHUNK-wide column
+    panel, so a tile never straddles a segment boundary and its unpack
+    width + byte offset come from the prefetched per-tile descriptor
+    (`segmap.tile_table`). K loops inside the kernel with manual DMA from
+    the flat buffer — 'off' copies/waits/dots serially per K tile,
+    'double_buffer' rotates two slots with the next tile's copy issued
+    behind the current dot. Both orders accumulate identically in int32,
+    so they are bit-exact vs each other and vs running each segment
+    through the uniform kernel and concatenating (the composition
+    oracle, tests/test_mixed_operand_kernel.py).
+    """
+    check_pipeline(pipeline)
+    mdim = x.shape[0]
+    pf_a = packing.pack_factor(a_bits)
+    k_pad = x.shape[1] * pf_a
+    assert k_pad == packing.padded_size(k_logical), (k_pad, k_logical)
+    n = segmap.n
+    assert n % LANE == 0, n
+    assert w_flat.ndim == 1 and w_flat.shape[0] == segmap.packed_bytes(
+        k_logical), (w_flat.shape, segmap.runs)
+    widths = segmap.widths()
+    if block is None:
+        bm, bk = segmented_default_block(mdim, k_pad, a_bits, widths)
+    else:
+        bm, _, bk = block
+        bk = segmented_bk(k_pad, bk)
+    assert mdim % bm == 0, (mdim, bm)
+    nk = k_pad // bk
+    nslots = 2 if pipeline == "double_buffer" else 1
+    slot_bytes = bk // min(packing.pack_factor(b) for b in widths) * LANE
+
+    codes, offs = segmap.tile_table(k_logical)
+    if out_dtype is None:
+        out_dtype = EPILOGUE_DTYPES[epilogue]
+
+    kernel = functools.partial(
+        _qmatmul_segmented_kernel, nk=nk, bk=bk, widths=widths,
+        a_bits=a_bits, a_signed=a_signed, d=d, out_bits=out_bits,
+        epilogue=epilogue, scale=scale, pipeline=pipeline)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(mdim // bm, n // LANE),
+        in_specs=[
+            pl.BlockSpec((bm, k_pad // pf_a), lambda i, j, *_: (i, 0)),
+            pl.BlockSpec((1, LANE), lambda i, j, *_: (0, j)),
+            pl.BlockSpec((1, LANE), lambda i, j, *_: (0, j)),
+            pl.BlockSpec((1, LANE), lambda i, j, *_: (0, j)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm, LANE), lambda i, j, *_: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((nslots, slot_bytes), jnp.int8),
+            pltpu.SemaphoreType.DMA((nslots,)),
+            pltpu.VMEM((bm, LANE), jnp.int32),
+        ])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mdim, n), out_dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(codes, jnp.int32), jnp.asarray(offs, jnp.int32),
+      x, kappa.reshape(1, -1), lam.reshape(1, -1), m_mul.reshape(1, -1),
+      w_flat)

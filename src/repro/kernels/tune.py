@@ -206,12 +206,19 @@ def qdot_candidates(m: int, n: int, k: int, a_bits: int,
     cands = {(bm0, bn0, bk0)}
     for bm in {bm0, max(SUBLANE_I8, bm0 // 2), bm0 * 2}:
         for bn in {bn0, max(LANE, bn0 // 2)}:
-            for bk in {bk0, max(packing.CHUNK, bk0 // 2)}:
+            # halved bk rounded down to a CHUNK multiple — the kernel
+            # requires CHUNK-aligned K tiles (the ragged *final* tile is
+            # zero-padded, but the tile size itself must stay aligned)
+            bk_half = max(packing.CHUNK, (bk0 // 2) // packing.CHUNK
+                          * packing.CHUNK)
+            for bk in {bk0, bk_half}:
                 if m % bm == 0 or bm <= m:
                     cands.add((bm, bn, bk))
-    # keep only tiles that divide the padded problem cleanly enough for the
-    # wrapper (bk must divide K; bm/bn are padded to by the wrapper)
-    return tuple(sorted(c for c in cands if k % c[2] == 0))
+    # bm/bn are padded to by the wrapper; a ragged final K tile is now
+    # zero-padded inside qmatmul_packed (exact — zero containers hold zero
+    # in every plane), so bk is no longer limited to divisors of K. Keep
+    # only tiles that don't overshoot K entirely.
+    return tuple(sorted(c for c in cands if c[2] <= max(k, packing.CHUNK)))
 
 
 def qconv_candidates(shape, a_bits: int,

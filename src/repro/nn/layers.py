@@ -42,6 +42,13 @@ class QuantConfig:
     # Like `backend`, honored by call sites routing through the op
     # registry and carried through deployment plans (PlanRule.pipeline).
     pipeline: Optional[str] = None
+    # Fine-grain mixed precision (plan schema v4): ordered
+    # (n_start, n_end, w_bits) runs over the output-feature axis — one
+    # dense layer serves different channel groups at different widths
+    # (Nadalini et al. 2307.01056). None -> uniform w_bits. Normalized to
+    # a tuple-of-int-tuples (hashable) and validated through
+    # `packing.SegmentMap` in __post_init__.
+    segments: Optional[tuple] = None
     # DEPRECATION SHIM: pre-registry boolean. Normalized to None in
     # __post_init__ after mapping True -> 'pallas_interpret' (the old
     # default silently ran interpret mode), False -> 'xla'.
@@ -51,6 +58,9 @@ class QuantConfig:
         if self.pipeline is not None:
             from repro.kernels.common import check_pipeline
             check_pipeline(self.pipeline)
+        if self.segments is not None:
+            sm = packing.SegmentMap(tuple(tuple(r) for r in self.segments))
+            object.__setattr__(self, "segments", sm.runs)
         if self.use_kernel is not None:
             if self.backend is not None:
                 raise ValueError(
@@ -98,7 +108,17 @@ def dense_tap(fn: Callable):
 def dense_def(d_in: int, d_out: int, axes=("embed", "mlp"), *,
               bias: bool = False, qcfg: QuantConfig = QOFF,
               dtype=jnp.float32, scale: float = 1.0):
-    if qcfg.mode == "int":
+    if qcfg.mode == "int" and qcfg.segments is not None:
+        segmap = packing.SegmentMap(qcfg.segments)
+        if segmap.n != d_out:
+            raise ValueError(
+                f"segment map covers N={segmap.n} but d_out={d_out}")
+        # flat segmented container (panel-major, exact bytes); the sharding
+        # axis collapses away — segmented denses are not TP-sharded today
+        p = {"w_packed": ParamDef((segmap.packed_bytes(d_in),), (None,),
+                                  "zeros", jnp.int8),
+             "w_scale": ParamDef((d_out,), (axes[1],), "ones", jnp.float32)}
+    elif qcfg.mode == "int":
         kp = packing.padded_size(d_in) // packing.pack_factor(qcfg.w_bits)
         p = {"w_packed": ParamDef((kp, d_out), (axes[0], axes[1]),
                                   "zeros", jnp.int8),
@@ -146,9 +166,23 @@ def _int_matmul(p, x, qcfg: QuantConfig):
     absmax = qcfg.a_absmax or 4.0
     a_max = packing.int_range(qcfg.a_bits, True)[1]  # A8 caps at 127 (int8)
     a_scale = absmax / a_max
+    k_logical = x.shape[-1]
     x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / a_scale), -a_max, a_max
                    ).astype(jnp.int8)
     x_q = packing.pad_to_chunk(x_q, axis=-1)
+    if qcfg.segments is not None:
+        # fine-grain mixed precision: each N-run is a uniform container
+        # view of the flat segmented buffer — a static Python loop over
+        # runs, so the path stays jit/scan-safe (segment maps are config,
+        # not data)
+        segmap = packing.SegmentMap(qcfg.segments)
+        outs = []
+        for i, (s, e, b) in enumerate(segmap.runs):
+            wp = packing.segment_packed(p["w_packed"], segmap, i, k_logical)
+            sc = (p["w_scale"][s:e] * a_scale).astype(jnp.float32)
+            outs.append(xla_int_gemm(x_q, wp, w_bits=b, epilogue="dequant",
+                                     scale=sc, out_dtype=x.dtype))
+        return jnp.concatenate(outs, axis=-1)
     scale = (p["w_scale"] * a_scale).astype(jnp.float32)
     return xla_int_gemm(x_q, p["w_packed"], w_bits=qcfg.w_bits,
                         epilogue="dequant", scale=scale, out_dtype=x.dtype)
@@ -177,6 +211,29 @@ def pack_dense_weights(w, w_bits: int, *, assert_range: bool = False):
     w_hat = packing.pad_to_chunk(w_hat, axis=red)
     return packing.pack(w_hat, w_bits, axis=red,
                         assert_range=assert_range), w_scale
+
+
+def pack_dense_weights_segmented(w, segments, *, assert_range: bool = False):
+    """fp weights (K,N) or stacked (L,K,N) -> (w_flat, w_scale) at
+    per-run widths: each output-channel run quantizes on its own
+    per-channel symmetric grid at its own w_bits, then the runs pack into
+    one flat segmented container (`packing.pack_segmented`). w_scale
+    spans the full N regardless of widths."""
+    segmap = (segments if isinstance(segments, packing.SegmentMap)
+              else packing.SegmentMap(tuple(tuple(r) for r in segments)))
+    if w.shape[-1] != segmap.n:
+        raise ValueError(
+            f"segment map covers N={segmap.n} but weights have "
+            f"d_out={w.shape[-1]}")
+    hats, scales = [], []
+    for s, e, b in segmap.runs:
+        h, sc = quantize_dense_weights(w[..., s:e], b)
+        hats.append(h)
+        scales.append(sc)
+    w_hat = jnp.concatenate(hats, axis=-1)
+    w_scale = jnp.concatenate(scales, axis=-1)
+    return packing.pack_segmented(w_hat, segmap,
+                                  assert_range=assert_range), w_scale
 
 
 # ------------------------------------------------------------ embedding ---

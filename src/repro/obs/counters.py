@@ -90,13 +90,24 @@ def qconv_costs(shape, a_bits: int, w_bits: int) -> Dict[str, int]:
 
 
 def record(op: str, shape, a_bits: int, w_bits: int, *, backend: str,
-           pipeline: str) -> Optional[Dict[str, int]]:
+           pipeline: str,
+           w_packed_bytes: Optional[int] = None) -> Optional[Dict[str, int]]:
     """Bump the (op, bits, backend, pipeline) bucket for one call; returns
-    the per-call deltas (None when observability is off)."""
+    the per-call deltas (None when observability is off).
+
+    GEMM-shaped ops ("qdot", "qdot_mixed") share the (m, k, n) cost
+    model; everything else is the conv key. ``w_packed_bytes`` replaces
+    the uniform-container weight term of ``packed_bytes`` — segmented
+    containers stream exactly their per-run byte count, not k*n/pf at
+    one width."""
     if not trace.enabled():
         return None
-    costs = (qdot_costs if op == "qdot" else qconv_costs)(
+    costs = (qdot_costs if op.startswith("qdot") else qconv_costs)(
         shape, a_bits, w_bits)
+    if w_packed_bytes is not None:
+        m, kdim, n = (int(s) for s in shape[:3])
+        costs["packed_bytes"] = (m * kdim // _pack_factor(a_bits)
+                                 + int(w_packed_bytes) + m * n)
     k = key(op, w_bits, a_bits, backend, pipeline)
     with _LOCK:
         bucket = _OPS.setdefault(k, dict.fromkeys(_FIELDS, 0))

@@ -304,11 +304,11 @@ def test_old_plan_json_single_warning_and_backend_mapping(tmp_path):
     assert by_pat["layers/mlp/*"].backend == "pallas_interpret"
     assert by_pat["layers/attn/*"].backend == "xla"  # explicit pin kept
     assert by_pat["layers/mlp/*"].w_bits == 4      # not dropped
-    # re-save upgrades the artifact: v3, backend field, no use_kernel
+    # re-save upgrades the artifact: v4, backend field, no use_kernel
     f = tmp_path / "plan.json"
     save_plan(plan, f)
     d = json.loads(f.read_text())
-    assert d["version"] == PLAN_VERSION == 3
+    assert d["version"] == PLAN_VERSION == 4
     assert all("use_kernel" not in r for r in d["rules"])
     assert d["rules"][0]["backend"] == "pallas_interpret"
     with warnings.catch_warnings():

@@ -37,6 +37,11 @@ KERNELS_OK = {
                     "fig8_8bit_double_buffer": 419.2},
     "packed_bytes": {"fig8_8bit_off": 786432,
                      "fig8_8bit_double_buffer": 786432},
+    # fine-grain mixed-precision ladder (PR 9): "|"-joined container
+    # widths the row's kernel consumed, widest first
+    "segment_bits": {"fig8_8bit_off": "8",
+                     "fig8_8bit_double_buffer": "8",
+                     "fig11_conv16x16_8bit_full": "8|2"},
 }
 
 TRACE_OK = {
@@ -143,6 +148,15 @@ def test_kernels_fixture_valid():
     (lambda p: p["macs_per_us"].update(fig8_8bit_off=-1.0),
      "out of range"),
     (lambda p: p["packed_bytes"].update(fig8_8bit_off=1.5), "expected"),
+    (lambda p: p.pop("segment_bits"), "missing required field"),
+    (lambda p: p["segment_bits"].update(fig8_8bit_off="3"),
+     "out of range"),
+    (lambda p: p["segment_bits"].update(fig8_8bit_off="2|8"),
+     "out of range"),         # must be widest first
+    (lambda p: p["segment_bits"].update(fig8_8bit_off="8|8"),
+     "out of range"),         # no duplicate widths
+    (lambda p: p["segment_bits"].update(ghost_row="8"),
+     "not in us_per_call"),
 ])
 def test_kernels_rejects(mutate, match):
     with pytest.raises(SchemaError, match=match):

@@ -101,6 +101,61 @@ def test_qmatmul_packed_direct_db_vs_off(rng):
     assert np.array_equal(np.asarray(off), np.asarray(db))
 
 
+# ------------------------------------------------------- qdot: ragged K ---
+
+@pytest.mark.parametrize("k,bk", [
+    (640, 256),   # 2 full K tiles + 128-row ragged tail
+    (384, 256),   # 1 full + ragged
+    (256, 512),   # K < bk: one tile, half of it zero padding
+])
+def test_qdot_ragged_k_block(k, bk, rng):
+    """bk no longer has to divide K: the kernel zero-pads both packed
+    operands to the next bk multiple (zero containers hold zero in every
+    plane, so the extra MACs are exact no-ops in both pipeline modes)."""
+    params = _mk_qdot_params(rng, 4, 4, K=k, N=128)
+    x = _mk_acts(rng, 4, M=32, K=k)
+    want, outs = _qdot_all_modes(params, x, block=(32, 128, bk))
+    for p, got in outs.items():
+        assert np.array_equal(got, want), (p, k, bk)
+
+
+def test_qmatmul_packed_ragged_k_direct(rng):
+    """Kernel entry itself: a ragged final K tile matches the divisor-bk
+    result bit-for-bit, in both modes."""
+    m, k, n = 32, 384, 128
+    params = _mk_qdot_params(rng, 8, 2, K=k, N=n)
+    xp = packing.pack(_mk_acts(rng, 8, M=m, K=k), 8, axis=-1)
+    kw = dict(a_bits=8, a_signed=False, w_bits=2, d=params.d,
+              out_bits=params.out_bits, interpret=True)
+    want = np.asarray(qmatmul_packed(
+        xp, params.w_packed, params.kappa, params.lam, params.m,
+        block=(32, 128, 128), pipeline="off", **kw))
+    for pipeline in PIPELINE_MODES:
+        got = qmatmul_packed(xp, params.w_packed, params.kappa, params.lam,
+                             params.m, block=(32, 128, 256),
+                             pipeline=pipeline, **kw)
+        assert np.array_equal(np.asarray(got), want), pipeline
+
+
+def test_qdot_candidates_allow_ragged_bk():
+    """The tune ladder no longer filters bk to divisors of K — a ragged
+    final tile is legal — but never offers a bk that overshoots K by a
+    whole tile."""
+    cands = tune.qdot_candidates(64, 256, 1280, 8, 8)
+    assert cands, "empty candidate ladder"
+    assert any(1280 % bk for _, _, bk in cands), \
+        "expected at least one non-divisor bk candidate"
+    assert all(bk <= 1280 for _, _, bk in cands)
+    # every bk the ladder offers must be a legal (CHUNK-aligned) tile —
+    # halving 896 naively would give 448, which the kernel rejects
+    for k in (384, 640, 896, 1280):
+        for _, _, bk in tune.qdot_candidates(64, 256, k, 8, 8):
+            assert bk % packing.CHUNK == 0, (k, bk)
+    # K smaller than every tile: the CHUNK floor keeps the ladder alive
+    small = tune.qdot_candidates(8, 128, 128, 8, 8)
+    assert small and all(bk <= max(128, packing.CHUNK) for _, _, bk in small)
+
+
 # ----------------------------------------------------- qconv: bit grid ---
 
 @pytest.mark.parametrize("ab", BITS)

@@ -1,0 +1,199 @@
+"""Differential parity wall for the mixed-operand qdot (``qdot_mixed``).
+
+Oracle by composition: running each segment through the *uniform* kernel
+path and concatenating along N is bit-exact by construction (int32
+accumulation is order-invariant), so every mixed-operand backend must
+match it to the bit. The grid covers segment mixes {8|4, 8|2, 4|2,
+8|4|2} x epilogues {int, dequant, raw} x ragged M/K/N x pipeline modes
+{off, double_buffer} x backends {pallas_interpret, xla, eager_ref},
+plus degenerate single-segment maps proving the uniform path is
+untouched.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import packing
+from repro.core.packing import CHUNK, SegmentMap
+from repro.core.quantize import (QuantizedLinearParams,
+                                 quantize_linear_segmented)
+from repro.kernels import api
+from repro.kernels.common import EPILOGUE_DTYPES
+
+MIXES = {"8|4": (8, 4), "8|2": (8, 2), "4|2": (4, 2), "8|4|2": (8, 4, 2)}
+
+
+def _segmap(widths, n):
+    """One run per width: interior boundaries every CHUNK, ragged tail."""
+    runs, pos = [], 0
+    for i, b in enumerate(widths):
+        end = n if i == len(widths) - 1 else pos + CHUNK
+        runs.append((pos, end, b))
+        pos = end
+    return SegmentMap(tuple(runs))
+
+
+def _mk_params(rng, k, n, widths, *, a_bits=8, a_signed=True, out_bits=8,
+               d=18):
+    segmap = _segmap(widths, n)
+    w_hat = np.zeros((k, n), np.int8)
+    for s, e, b in segmap.runs:
+        lo, hi = packing.int_range(b, True)
+        w_hat[:, s:e] = rng.integers(lo, hi + 1, size=(k, e - s))
+    kappa = rng.integers(-127, 128, size=(n,)).astype(np.int32)
+    lam = rng.integers(-2**18, 2**18, size=(n,)).astype(np.int32)
+    m = rng.integers(0, 2**15, size=(n,)).astype(np.int32)
+    return quantize_linear_segmented(
+        jnp.asarray(w_hat), segmap, kappa, lam, m, a_bits=a_bits,
+        a_signed=a_signed, d=d, out_bits=out_bits, assert_range=True)
+
+
+def _mk_x(rng, mdim, k, a_bits, a_signed):
+    lo, hi = packing.int_range(a_bits, a_signed)
+    x = rng.integers(lo, hi + 1, size=(mdim, k)).astype(np.int8)
+    xp = packing.pack(packing.pad_to_chunk(jnp.asarray(x), axis=-1),
+                      a_bits, axis=-1)
+    return xp
+
+
+def _oracle(params, x_packed, *, epilogue="int", scale=1.0):
+    """Segment-wise uniform-kernel composition (the bit-exactness oracle)."""
+    outs = [api.qdot_packed(params.segment_params(i), x_packed,
+                            epilogue=epilogue, scale=scale, backend="xla")
+            for i in range(len(params.segmap.runs))]
+    return np.concatenate([np.asarray(o) for o in outs], axis=-1)
+
+
+# -------------------------------------------------------------- the grid ---
+
+
+@pytest.mark.parametrize("backend", ["pallas_interpret", "xla", "eager_ref"])
+@pytest.mark.parametrize("pipeline", ["off", "double_buffer"])
+@pytest.mark.parametrize("mix", sorted(MIXES), ids=lambda m: f"mix={m}")
+def test_parity_grid(mix, pipeline, backend, rng):
+    # ragged everything: M=33, K=200 (not a CHUNK multiple), N=300
+    # (ragged tail panel, exercises pad_segmented in the pallas path)
+    mdim, k, n = 33, 200, 300
+    params = _mk_params(rng, k, n, MIXES[mix])
+    xp = _mk_x(rng, mdim, k, 8, True)
+    want = _oracle(params, xp)
+    got = api.qdot_packed(params, xp, backend=backend, pipeline=pipeline)
+    assert got.shape == (mdim, n) and got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("backend", ["pallas_interpret", "xla"])
+@pytest.mark.parametrize("epilogue", ["int", "dequant", "raw"])
+def test_epilogue_parity(epilogue, backend, rng):
+    params = _mk_params(rng, 200, 300, MIXES["8|4|2"])
+    xp = _mk_x(rng, 16, 200, 8, True)
+    scale = 0.0123 if epilogue == "dequant" else 1.0
+    want = _oracle(params, xp, epilogue=epilogue, scale=scale)
+    got = api.qdot_packed(params, xp, epilogue=epilogue, scale=scale,
+                          backend=backend)
+    assert got.dtype == EPILOGUE_DTYPES[epilogue]
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 128, 256),     # single row, aligned K/N
+    (33, 200, 300),    # everything ragged
+    (16, 256, 130),    # ragged tail panel only
+    (48, 512, 384),    # aligned, multi-K-tile
+])
+def test_ragged_shape_sweep(shape, rng):
+    mdim, k, n = shape
+    params = _mk_params(rng, k, n, MIXES["8|2"])
+    xp = _mk_x(rng, mdim, k, 8, True)
+    want = _oracle(params, xp)
+    for backend in ("pallas_interpret", "xla", "eager_ref"):
+        got = api.qdot_packed(params, xp, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"{backend} {shape}")
+
+
+@pytest.mark.parametrize("a_bits,a_signed", [(8, True), (4, False),
+                                             (4, True), (2, False)])
+def test_activation_width_mix(a_bits, a_signed, rng):
+    """Mixed weights x sub-byte activations: both operands packed."""
+    params = _mk_params(rng, 256, 300, MIXES["4|2"],
+                        a_bits=a_bits, a_signed=a_signed)
+    xp = _mk_x(rng, 32, 256, a_bits, a_signed)
+    want = _oracle(params, xp)
+    for backend in ("pallas_interpret", "xla"):
+        got = api.qdot_packed(params, xp, backend=backend,
+                              pipeline="double_buffer")
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=backend)
+
+
+# -------------------------------------------------- degenerate / routing ---
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_single_segment_matches_uniform(bits, rng):
+    """A one-run map must reproduce the plain uniform qdot exactly —
+    the fast path for homogeneous layers is untouched."""
+    k, n = 200, 256
+    params = _mk_params(rng, k, n, (bits,))
+    xp = _mk_x(rng, 24, k, 8, True)
+    seg0 = params.segment_params(0)
+    assert isinstance(seg0, QuantizedLinearParams)
+    want = np.asarray(api.qdot_packed(seg0, xp, backend="xla"))
+    for backend in ("pallas_interpret", "xla", "eager_ref"):
+        got = api.qdot_packed(params, xp, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=backend)
+
+
+def test_qdot_unpacked_entry(rng):
+    """The api.qdot front door (pad + pack on the fly) routes segmented
+    params through qdot_mixed, leading dims restored."""
+    params = _mk_params(rng, 200, 300, MIXES["8|4"])
+    lo, hi = packing.int_range(8, True)
+    x = rng.integers(lo, hi + 1, size=(2, 5, 200)).astype(np.int8)
+    got = api.qdot(params, jnp.asarray(x), backend="xla")
+    assert got.shape == (2, 5, 300)
+    xp = _mk_x(rng, 10, 200, 8, True)
+    # regenerating x above != xp, so compare against the same flattened x
+    xp = packing.pack(packing.pad_to_chunk(
+        jnp.asarray(x.reshape(10, 200)), axis=-1), 8, axis=-1)
+    want = _oracle(params, xp)
+    np.testing.assert_array_equal(np.asarray(got).reshape(10, 300), want)
+
+
+def test_mesh_not_implemented(rng):
+    import jax
+    from jax.sharding import Mesh
+    params = _mk_params(rng, 128, 256, MIXES["8|4"])
+    x = jnp.zeros((8, 128), jnp.int8)
+    devs = np.array(jax.devices()[:2]).reshape(2, 1)
+    with Mesh(devs, ("data", "model")) as mesh:
+        with pytest.raises(NotImplementedError, match="co-aligned"):
+            api.qdot(params, x, mesh=mesh)
+
+
+def test_counters_record_segment_bytes(rng):
+    """obs counters use the exact segmented byte count, not widest-width."""
+    from repro import obs
+    from repro.obs import counters as obs_counters
+    params = _mk_params(rng, 256, 384, MIXES["8|2"])
+    xp = _mk_x(rng, 16, 256, 8, True)
+    obs_counters.reset()
+    try:
+        with obs.enabled_scope():
+            api.qdot_packed(params, xp, backend="xla")
+            snap = obs_counters.snapshot()
+    finally:
+        obs_counters.reset()
+    rows = {k: v for k, v in snap.items()
+            if obs_counters.parse_key(k)["op"] == "qdot_mixed"}
+    assert len(rows) == 1
+    (key, bucket), = rows.items()
+    assert obs_counters.parse_key(key)["w_bits"] == 8  # widest width keys
+    exact = params.segmap.packed_bytes(params.k_logical)
+    m, k, n = 16, 256, 384
+    assert bucket["packed_bytes"] == m * k + exact + m * n  # a_bits=8: pf=1
+    # strictly fewer streamed bytes than a uniform-8-bit container
+    assert bucket["packed_bytes"] < obs_counters.qdot_costs(
+        (m, k, n), 8, 8)["packed_bytes"]

@@ -1,0 +1,212 @@
+"""Property-based fuzz wall for segmented packed containers (core/packing.py).
+
+Random SegmentMaps — random run counts, widths from WIDTHS={8,4,2},
+CHUNK-aligned interior boundaries with a ragged final run — checked for:
+
+* pack -> unpack round-trip exactness (per-run and whole-buffer);
+* planar-perm consistency: each run's container block is byte-identical
+  to what the uniform chunk-planar `pack` produces for those columns, and
+  its `unpack_planes` planes land on the `planar_perm` logical order;
+* offset-table byte accounting: packed_bytes == sum(run_len * K_pad * b/8),
+  seg_offsets deltas match per-run sizes, tile_table covers the buffer;
+* loud ValueErrors on malformed maps (gaps, overlaps, empty runs,
+  unaligned interior boundaries, unsupported widths).
+
+Properties are driven two ways: hypothesis `@given` when the package is
+installed (conftest degrades them to skips otherwise), and a deterministic
+seed sweep that always runs so tier-1 keeps the coverage either way.
+"""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_api
+from repro.core import packing
+from repro.core.packing import CHUNK, WIDTHS, SegmentMap
+
+given, settings, st = hypothesis_api()
+
+N_SWEEP_SEEDS = 25
+
+
+def random_segmap(rng, *, max_runs=4, ragged=None):
+    """Random valid SegmentMap: interior runs are CHUNK multiples wide,
+    the final run is ragged with probability ~1/2 (or per ``ragged``)."""
+    n_runs = int(rng.integers(1, max_runs + 1))
+    runs, pos = [], 0
+    for i in range(n_runs):
+        last = i == n_runs - 1
+        width = int(rng.integers(1, 4)) * CHUNK
+        if last and (bool(rng.integers(0, 2)) if ragged is None else ragged):
+            width = int(rng.integers(1, 2 * CHUNK))
+        runs.append((pos, pos + width, int(rng.choice(WIDTHS))))
+        pos += width
+    return SegmentMap(tuple(runs))
+
+
+def random_values(rng, k, segmap):
+    """int8 values in each run's signed range (so assert_range passes)."""
+    w = np.zeros((k, segmap.n), np.int8)
+    for s, e, b in segmap.runs:
+        lo, hi = packing.int_range(b, True)
+        w[:, s:e] = rng.integers(lo, hi + 1, size=(k, e - s), dtype=np.int64)
+    return w
+
+
+# ------------------------------------------------------------ properties ---
+
+
+def check_roundtrip(rng, seed):
+    segmap = random_segmap(rng)
+    k = int(rng.integers(1, 3 * CHUNK))
+    w = random_values(rng, k, segmap)
+    buf = np.asarray(packing.pack_segmented(w, segmap, assert_range=True))
+    assert buf.dtype == np.int8
+    assert buf.shape == (segmap.packed_bytes(k),), (seed, segmap.runs, k)
+    out = np.asarray(packing.unpack_segmented(buf, segmap, k))
+    assert out.shape == (packing.padded_size(k), segmap.n)
+    np.testing.assert_array_equal(out[:k], w, err_msg=f"seed={seed}")
+    # K padding rows unpack to exact zeros (zero containers, every width)
+    np.testing.assert_array_equal(out[k:], 0)
+
+
+def check_planar_consistency(rng, seed):
+    """Each run's container block == the uniform packer's output for those
+    columns, and its planes follow the planar_perm logical order."""
+    segmap = random_segmap(rng)
+    k = int(rng.integers(1, 3 * CHUNK))
+    kp = packing.padded_size(k)
+    w = random_values(rng, k, segmap)
+    buf = packing.pack_segmented(w, segmap)
+    for i, (s, e, b) in enumerate(segmap.runs):
+        seg_view = np.asarray(packing.segment_packed(buf, segmap, i, k))
+        uniform = np.asarray(packing.pack(
+            packing.pad_to_chunk(w[:, s:e], axis=-2), b, axis=-2))
+        np.testing.assert_array_equal(
+            seg_view, uniform, err_msg=f"seed={seed} run={i}")
+        # plane p, packed-row r holds logical element chunk*CHUNK + p*sub
+        # + (r % sub): interleave the planes per chunk and the result must
+        # equal the padded values gathered by planar_perm
+        planes = packing.unpack_planes(seg_view, b, True)
+        pf = packing.pack_factor(b)
+        sub = CHUNK // pf
+        stacked = np.stack([np.asarray(p) for p in planes], axis=0)
+        planar = (stacked.reshape(pf, kp // CHUNK, sub, e - s)
+                  .transpose(1, 0, 2, 3).reshape(kp, e - s))
+        perm = packing.planar_perm(kp, b)
+        padded = np.asarray(packing.pad_to_chunk(w[:, s:e], axis=-2))
+        np.testing.assert_array_equal(
+            planar, padded[perm], err_msg=f"seed={seed} run={i}")
+
+
+def check_byte_accounting(rng, seed):
+    segmap = random_segmap(rng)
+    k = int(rng.integers(1, 3 * CHUNK))
+    kp = packing.padded_size(k)
+    sizes = [(e - s) * kp * b // 8 for s, e, b in segmap.runs]
+    assert segmap.packed_bytes(k) == sum(sizes), (seed, segmap.runs)
+    offs = segmap.seg_offsets(k)
+    assert offs[0] == 0
+    for i in range(len(offs) - 1):
+        assert offs[i + 1] - offs[i] == sizes[i], (seed, i)
+    assert offs[-1] + sizes[-1] == segmap.packed_bytes(k)
+    # tile_table (on the CHUNK-padded map) tiles the padded buffer exactly
+    buf = packing.pack_segmented(random_values(rng, k, segmap), segmap)
+    buf_p, segmap_p = packing.pad_segmented(buf, segmap, k)
+    codes, toffs = segmap_p.tile_table(k)
+    widths = segmap_p.widths()
+    assert codes.shape == toffs.shape == (segmap_p.n // CHUNK,)
+    pos = 0
+    for c, o in zip(codes, toffs):
+        assert int(o) == pos, seed
+        pos += (kp // packing.pack_factor(widths[int(c)])) * CHUNK
+    assert pos == buf_p.shape[-1] == segmap_p.packed_bytes(k)
+
+
+PROPERTIES = (check_roundtrip, check_planar_consistency,
+              check_byte_accounting)
+
+
+@pytest.mark.parametrize("prop", PROPERTIES, ids=lambda p: p.__name__)
+@pytest.mark.parametrize("seed", range(N_SWEEP_SEEDS))
+def test_seed_sweep(prop, seed):
+    prop(np.random.default_rng(seed), seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_fuzz_roundtrip(seed):
+    check_roundtrip(np.random.default_rng(seed), seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=100, deadline=None)
+def test_fuzz_planar_consistency(seed):
+    check_planar_consistency(np.random.default_rng(seed), seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_fuzz_byte_accounting(seed):
+    check_byte_accounting(np.random.default_rng(seed), seed)
+
+
+# ---------------------------------------------------------- loud failures ---
+
+
+@pytest.mark.parametrize("runs,match", [
+    ((), "empty run list"),
+    (((0, 128, 3),), "unsupported width"),
+    (((0, 128, 8), (256, 384, 4)), "gap"),
+    (((0, 256, 8), (128, 384, 4)), "overlaps"),
+    (((0, 0, 8),), "empty or reversed"),
+    (((0, 128, 8), (128, 100, 4)), "empty or reversed"),
+    (((128, 256, 8),), "expected n_start=0"),
+    (((0, 100, 8), (100, 256, 4)), "not a\n?.*multiple of CHUNK|interior"),
+])
+def test_malformed_maps_raise(runs, match):
+    with pytest.raises(ValueError, match=match):
+        SegmentMap(tuple(runs))
+
+
+def test_ragged_interior_boundary_raises():
+    # only the FINAL run may end off-CHUNK
+    with pytest.raises(ValueError, match="interior boundary"):
+        SegmentMap(((0, 130, 8), (130, 256, 2)))
+    SegmentMap(((0, 128, 8), (128, 130, 2)))  # ragged tail: fine
+
+
+def test_pack_segmented_shape_mismatch_raises():
+    segmap = SegmentMap(((0, 128, 8), (128, 256, 4)))
+    with pytest.raises(ValueError, match="weight N=100"):
+        packing.pack_segmented(np.zeros((64, 100), np.int8), segmap)
+
+
+def test_pack_segmented_range_guard():
+    segmap = SegmentMap(((0, 128, 8), (128, 256, 2)))
+    w = np.zeros((32, 256), np.int8)
+    w[0, 200] = 5  # out of signed 2-bit range [-2, 1]
+    with pytest.raises(ValueError, match="2-bit range"):
+        packing.pack_segmented(w, segmap, assert_range=True)
+
+
+def test_tile_table_requires_padded_n():
+    segmap = SegmentMap(((0, 128, 8), (128, 200, 4)))
+    with pytest.raises(ValueError, match="pad the\n?.*container|CHUNK"):
+        segmap.tile_table(64)
+
+
+def test_uniform_degenerate_matches_plain_pack(rng):
+    """Single-run maps are byte-identical to the uniform packer."""
+    for bits in WIDTHS:
+        lo, hi = packing.int_range(bits, True)
+        w = rng.integers(lo, hi + 1, size=(200, 256), dtype=np.int64)
+        w = w.astype(np.int8)
+        segmap = SegmentMap.uniform(256, bits)
+        buf = np.asarray(packing.pack_segmented(w, segmap))
+        plain = np.asarray(packing.pack(
+            packing.pad_to_chunk(w, axis=-2), bits, axis=-2))
+        # panel-major flatten of the uniform container
+        rows = plain.shape[0]
+        parts = [plain[:, p:p + CHUNK].reshape(rows * CHUNK)
+                 for p in range(0, 256, CHUNK)]
+        np.testing.assert_array_equal(buf, np.concatenate(parts))
