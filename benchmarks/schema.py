@@ -231,6 +231,98 @@ def validate_serving(payload) -> None:
               "on p99 latency")
 
 
+# ----------------------------------------------------- BENCH_accuracy ---
+
+_ACC_MODES = ("float", "ptq", "qat")
+_ACC_PLANS = ("none", "uniform", "layer", "channel_group")
+
+
+def _accuracy_row(r, p):
+    _typed(r, dict, p)
+    _need(r, "name", str, p)
+    _need(r, "mode", str, p, lambda v: v in _ACC_MODES)
+    _need(r, "plan", str, p, lambda v: v in _ACC_PLANS)
+    _need(r, "w_bits", int, p, lambda v: v in (0, 2, 4, 8, 32))
+    _need(r, "accuracy", _NUM, p, lambda v: 0 <= v <= 1)
+    _need(r, "correct", int, p, lambda v: v >= 0)
+    _need(r, "n", int, p, lambda v: v >= 1)
+    if r["correct"] > r["n"]:
+        _fail(p, f"correct {r['correct']} > n {r['n']}")
+    _need(r, "packed_weight_bytes", int, p, lambda v: v >= 1)
+    _need(r, "train_steps", int, p, lambda v: v >= 1)
+    _need(r, "segmented_rules", int, p, lambda v: v >= 0)
+
+
+def validate_accuracy(payload) -> None:
+    """benchmarks/accuracy payload: accuracy-vs-packed-bytes Pareto rows
+    (every accuracy an integer-path `forward_int` measurement), plus the
+    acceptance gates. The gates are RECOMPUTED from the rows here — the
+    stored booleans can't claim what the rows don't show:
+      * uniform QAT >= uniform PTQ at W4 and W2,
+      * no plan row strictly dominated by a same-mode uniform row,
+      * the channel-group QAT plan has <= bytes and >= accuracy vs the
+        per-layer QAT plan (same budget; granularity is the only delta).
+    Smoke payloads keep the row schema but skip gate enforcement."""
+    _need(payload, "version", int, "$", lambda v: v == 1)
+    _need(payload, "net", str, "$")
+    mode = _need(payload, "mode", str, "$",
+                 lambda v: v in ("full", "smoke"))
+    ds = _need(payload, "dataset", dict, "$")
+    _need(ds, "name", str, "$.dataset")
+    _need(ds, "seed", int, "$.dataset")
+    _need(ds, "eval_images", int, "$.dataset", lambda v: v >= 1)
+    _need(payload, "budget_frac", _NUM, "$", lambda v: 0 < v < 1)
+    rows = _rows(payload, "$")
+    for i, r in enumerate(rows):
+        _accuracy_row(r, f"$.rows[{i}]")
+
+    def pick(m, plan, bits=None):
+        got = [r for r in rows if r["mode"] == m and r["plan"] == plan
+               and (bits is None or r["w_bits"] == bits)]
+        return got[0] if got else None
+
+    for m in ("ptq", "qat"):
+        for b in (8, 4, 2):
+            if pick(m, "uniform", b) is None:
+                _fail("$.rows", f"missing uniform row mode={m} w_bits={b}")
+    acc = _need(payload, "acceptance", dict, "$")
+    for key in ("qat_ge_ptq_w4", "qat_ge_ptq_w2", "plans_on_frontier",
+                "fine_dominates_layer", "all"):
+        _need(acc, key, bool, "$.acceptance")
+    if mode == "smoke":
+        return
+    for b in (4, 2):
+        q, p = pick("qat", "uniform", b), pick("ptq", "uniform", b)
+        if q["accuracy"] < p["accuracy"]:
+            _fail(f"$.acceptance.qat_ge_ptq_w{b}",
+                  f"QAT ({q['accuracy']}) below PTQ ({p['accuracy']}) "
+                  f"at W{b}")
+    for m in ("ptq", "qat"):
+        uni = [r for r in rows if r["mode"] == m and r["plan"] == "uniform"]
+        for r in rows:
+            if r["mode"] != m or r["plan"] not in ("layer",
+                                                   "channel_group"):
+                continue
+            for u in uni:
+                if (u["packed_weight_bytes"] <= r["packed_weight_bytes"]
+                        and u["accuracy"] >= r["accuracy"]
+                        and (u["packed_weight_bytes"]
+                             < r["packed_weight_bytes"]
+                             or u["accuracy"] > r["accuracy"])):
+                    _fail("$.acceptance.plans_on_frontier",
+                          f"{u['name']} dominates {r['name']}")
+    fine, layer = pick("qat", "channel_group"), pick("qat", "layer")
+    if fine is None or layer is None:
+        _fail("$.rows", "missing qat plan rows (layer/channel_group)")
+    if (fine["packed_weight_bytes"] > layer["packed_weight_bytes"]
+            or fine["accuracy"] < layer["accuracy"]):
+        _fail("$.acceptance.fine_dominates_layer",
+              "channel-group plan does not dominate-or-match the "
+              "per-layer plan")
+    if not acc["all"]:
+        _fail("$.acceptance.all", "gates hold but 'all' is false")
+
+
 # -------------------------------------------------------- BENCH_trace ---
 
 _TRACE_PHASES = ("X", "i", "B", "E", "M", "C")
@@ -285,6 +377,7 @@ VALIDATORS = {
     "BENCH_cluster.json": validate_cluster,
     "BENCH_e2e.json": validate_e2e,
     "BENCH_serving.json": validate_serving,
+    "BENCH_accuracy.json": validate_accuracy,
     "BENCH_trace.json": check_trace,
 }
 

@@ -53,10 +53,20 @@ def check_paper_map(errors: list):
     # the differential harness, and the benchmark-artifact schema, by
     # ISSUE-7 to include the observability subsystem, by ISSUE-8 to
     # include the continuous-batching serving runtime and its load
-    # generator, and by ISSUE-9 to include the fine-grain mixed-precision
+    # generator, by ISSUE-9 to include the fine-grain mixed-precision
     # stack: segmented containers, the mixed-operand kernel wall, and the
-    # channel-group planner)
+    # channel-group planner, and by ISSUE-10 to include the QAT→deploy
+    # accuracy subsystem: STE fake-quant, task-loss calibration, and the
+    # accuracy Pareto benchmark)
     required = {
+        "src/repro/qat/fakequant.py",
+        "src/repro/qat/train.py",
+        "src/repro/qat/data.py",
+        "src/repro/qat/evaluate.py",
+        "src/repro/launch/qat.py",
+        "src/repro/deploy/calibrate.py",
+        "benchmarks/accuracy.py",
+        "tests/test_qat.py",
         "src/repro/core/packing.py",
         "src/repro/core/quantize.py",
         "src/repro/deploy/planner.py",

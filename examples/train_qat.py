@@ -1,63 +1,63 @@
-"""QAT training driver with fault-tolerant runtime: trains an LM with
-4-bit fake-quant weights (STE), checkpoint/restart, straggler monitoring.
+"""QAT quickstart: fake-quant train a digit CNN, fold it to integers,
+and evaluate the deployed artifact on the integer path.
 
-Default is a CPU-sized model; --full trains the ~100M-param config (slow
-on CPU — intended for a real accelerator slice).
+The whole paper loop in one script, CPU-sized (<2 min):
 
-    PYTHONPATH=src python examples/train_qat.py [--steps 60] [--full]
+  1. train the smoke `qat-cnn` with W4 fake-quant weights and EMA-tracked
+     A8 activation ranges (`repro.qat` — STE gradients through the exact
+     `core.quantize` grids the deployment packs);
+  2. fold the trained model into the integer artifact (`quantize_net`,
+     eqs. 1-4) — `fold_check` proves the weight grids fold bit-exact,
+     no post-training recalibration anywhere;
+  3. evaluate BOTH paths on held-out digits: the fake-quant forward the
+     net trained with, and `forward_int` — the uint{8,4,2} arithmetic
+     the kernels execute. The two accuracies agree because training
+     simulated exactly what deployment runs.
+
+    PYTHONPATH=src python examples/train_qat.py [--steps 300] [--w-bits 4]
 """
 import argparse
-import dataclasses
-import tempfile
-
-import jax
-
-from repro.configs.base import ModelConfig, ShapeConfig
-from repro.data.pipeline import SyntheticLM
-from repro.launch.mesh import make_host_mesh
-from repro.models.api import build
-from repro.nn.layers import QuantConfig
-from repro.runtime.trainer import Trainer, TrainerConfig
-from repro.train.optimizer import OptConfig
-from repro.train.step import TrainStepConfig, make_train_fns
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--steps", type=int, default=60)
-ap.add_argument("--full", action="store_true",
-                help="~100M params (accelerator-sized)")
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--w-bits", type=int, default=4, choices=(8, 4, 2))
+ap.add_argument("--batch", type=int, default=64)
 args = ap.parse_args()
 
-if args.full:  # ~100M params
-    cfg = ModelConfig(name="qat-100m", family="lm", n_layers=12,
-                      d_model=768, n_heads=12, kv_heads=12, d_ff=3072,
-                      vocab=32768)
-else:
-    cfg = ModelConfig(name="qat-tiny", family="lm", n_layers=4,
-                      d_model=128, n_heads=4, kv_heads=4, d_ff=512,
-                      vocab=1024, remat=False)
-cfg = dataclasses.replace(
-    cfg, quant=QuantConfig(mode="fake", w_bits=4, a_bits=8))
+from repro.qat import (QATConfig, deploy, evaluate_int, fold_check,
+                       train_qat)
+from repro.qat.data import make_dataset
+from repro.qat.evaluate import evaluate_fq
+from repro.vision.configs import get_vision_config
+from repro.vision.models import streamed_weight_bytes
 
-model = build(cfg)
-mesh = make_host_mesh()
-shape = ShapeConfig("t", args.seq, args.batch, "train")
-init_fn, step, shards = make_train_fns(
-    model, mesh, shape,
-    TrainStepConfig(opt=OptConfig(lr=1e-3, warmup=20,
-                                  total_steps=args.steps)))
-data = SyntheticLM(cfg.vocab, args.batch, args.seq, seed=0)
-ckpt_dir = tempfile.mkdtemp(prefix="qat_ckpt_")
-trainer = Trainer(init_fn, jax.jit(step), data,
-                  TrainerConfig(total_steps=args.steps, ckpt_every=20,
-                                ckpt_dir=ckpt_dir))
-state, log = trainer.run(jax.random.PRNGKey(0))
-print(f"step {log[0]['step']}: loss {log[0]['loss']:.3f}")
-print(f"step {log[-1]['step']}: loss {log[-1]['loss']:.3f} "
-      f"(median step {trainer.monitor.median * 1e3:.0f} ms, "
-      f"stragglers flagged: {trainer.monitor.flags})")
-print(f"checkpoints at {ckpt_dir}")
-assert log[-1]["loss"] < log[0]["loss"]
-print("QAT model trained — deploy by packing weights "
-      "(examples/serve_quantized.py)")
+cfg = get_vision_config("qat-cnn", smoke=True)
+train_data = make_dataset("synthetic", split="train", seed=0)
+test_data = make_dataset("synthetic", split="test", seed=0)
+
+# -- 1. fake-quant training ------------------------------------------------
+qc = QATConfig(steps=args.steps, batch=args.batch, w_bits=args.w_bits,
+               a_bits=8, seed=0, log_every=max(args.steps // 6, 1))
+result = train_qat(cfg, train_data, qc)
+for r in result.log:
+    print(f"step {r['step']:4d}  loss {r['loss']:.4f}  acc {r['acc']:.3f}")
+assert result.log[-1]["loss"] < result.log[0]["loss"], \
+    "training did not reduce the loss"
+
+# -- 2. fold to the integer artifact ---------------------------------------
+fold_check(result)   # every weight grid folds bit-exact, else AssertionError
+qnet = deploy(result)
+print(f"\ndeployed W{args.w_bits}A8: "
+      f"{streamed_weight_bytes(qnet)} packed bytes/forward")
+
+# -- 3. integer-path evaluation --------------------------------------------
+fq = evaluate_fq(result, test_data.batches(100, 5))
+iq = evaluate_int(qnet, test_data.batches(100, 5))
+print(f"fake-quant accuracy : {fq['accuracy']:.4f} "
+      f"({fq['correct']}/{fq['n']})")
+print(f"integer-path accuracy: {iq['accuracy']:.4f} "
+      f"({iq['correct']}/{iq['n']})")
+assert iq["accuracy"] > 0.5, "integer-path accuracy collapsed"
+assert abs(iq["accuracy"] - fq["accuracy"]) < 0.05, \
+    "trained (fake-quant) and deployed (integer) paths disagree"
+print("OK: trained fake-quant model folded losslessly to the integer path")

@@ -104,6 +104,51 @@ def fake_quantize(t, spec: QuantSpec):
     return t_clip + jax.lax.stop_gradient(q - t_clip)
 
 
+# --- shared int8 side-channel codecs (optimizer state, gradient wire) ---
+# Symmetric absmax int8 — the same grid family as `QuantSpec.weight` but
+# jit-traced (scales are tensors, not floats) and shaped for streaming
+# state, not packed serving artifacts. Two layouts:
+#   rowwise   — scale per last-axis row; codes keep the param shape, so
+#               ZeRO/GSPMD shardings propagate untouched (optimizer m)
+#   blockwise — flat BLOCK-sized runs with one scale each; shape-agnostic
+#               (the gradient compression wire format)
+
+BLOCK = 256          # blockwise run length (gradient wire)
+
+
+def quantize_int8_rowwise(x):
+    """Per-row (last axis) symmetric int8: {"codes", "scale"}."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"codes": codes, "scale": scale[..., 0]}
+
+
+def dequantize_int8_rowwise(s, shape=None):
+    """Inverse of `quantize_int8_rowwise` (``shape`` accepted for
+    signature-compatibility with the log-scale codec; codes already
+    carry it)."""
+    return s["codes"].astype(jnp.float32) * s["scale"][..., None]
+
+
+def quantize_int8_blockwise(x):
+    """Flat BLOCK-run symmetric int8 -> (codes (n/BLOCK, BLOCK), scale)."""
+    n = x.size
+    pad = (-n) % BLOCK
+    xb = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_int8_blockwise(codes, scale, shape):
+    """Inverse of `quantize_int8_blockwise`, cropping the pad."""
+    import math
+    x = codes.astype(jnp.float32) * scale
+    return x.reshape(-1)[: math.prod(shape)].reshape(shape)
+
+
 def lin(w_hat, x_hat):
     """Eq. (2): integer dot product with int32 accumulation."""
     return jnp.matmul(

@@ -318,19 +318,11 @@ class _ConvCollector:
         st.taps += 1
 
 
-def calibrate_vision(cfg, fp_params, image_batches: Sequence[np.ndarray], *,
-                     bits: Sequence[int] = CANDIDATE_BITS, a_bits: int = 8,
-                     max_images: int = 64):
-    """Calibrate a vision net: (per-layer `CalibStats`, per-edge absmax).
-
-    `cfg` is a `repro.vision.models.VisionConfig`; `image_batches` are
-    (B, H, W, C) float arrays. The stats feed `plan_mixed_precision`
-    unchanged; the absmax dict feeds
-    `repro.vision.models.quantize_net` (activation-grid chaining).
-    """
-    from repro.vision.layers import conv_tap
-    from repro.vision.models import (COMPUTE_KINDS, forward_fp, get_path,
-                                     trace_shapes)
+def _vision_stats_geom(cfg, fp_params):
+    """The shared stats/geometry walk: per compute path, an empty
+    `CalibStats` with the deployable artifact's (d_in, d_out) plus the
+    layer geometry and the id(w) -> path map the conv_tap needs."""
+    from repro.vision.models import COMPUTE_KINDS, get_path, trace_shapes
 
     stats: Dict[str, CalibStats] = {}
     geom: Dict[str, dict] = {}
@@ -351,7 +343,46 @@ def calibrate_vision(cfg, fp_params, image_batches: Sequence[np.ndarray], *,
         geom[L.path] = {"kind": L.kind, "stride": L.stride,
                         "padding": L.padding, "groups": groups}
         id2path[id(node["w"])] = L.path
+    return stats, geom, id2path
 
+
+def calibrate_vision(cfg, fp_params, image_batches: Sequence[np.ndarray], *,
+                     bits: Sequence[int] = CANDIDATE_BITS, a_bits: int = 8,
+                     max_images: int = 64, sensitivity: str = "mse",
+                     labels: Optional[Sequence[np.ndarray]] = None,
+                     group_size: int = packing.CHUNK):
+    """Calibrate a vision net: (per-layer `CalibStats`, per-edge absmax).
+
+    `cfg` is a `repro.vision.models.VisionConfig`; `image_batches` are
+    (B, H, W, C) float arrays. The stats feed `plan_mixed_precision`
+    unchanged; the absmax dict feeds
+    `repro.vision.models.quantize_net` (activation-grid chaining).
+
+    ``sensitivity`` selects the per-layer cost signal:
+
+    * ``"mse"`` (default) — the output-MSE proxy of `_ConvCollector`:
+      cheap, label-free, but prices *local* layer error, not what the
+      task loses.
+    * ``"task_loss"`` — per-layer (and per-channel-group) sensitivity is
+      the **cross-entropy degradation on labeled batches** when that
+      layer (or group) alone is quantized to the candidate width:
+      sens(b) = max(loss_quantized(b) - loss_float, 0), sq_ref = 1. The
+      planner's knapsack then trades bytes directly against measured
+      task-loss increase (Nadalini et al. 2307.01056's accuracy-aware
+      group assignment). Requires ``labels`` (one int array per image
+      batch). Deterministic: pure forwards, no sampling.
+    """
+    if sensitivity == "task_loss":
+        return _calibrate_vision_task_loss(
+            cfg, fp_params, image_batches, labels, bits=bits,
+            a_bits=a_bits, group_size=group_size)
+    if sensitivity != "mse":
+        raise ValueError(f"unknown sensitivity {sensitivity!r}; expected "
+                         "'mse' or 'task_loss'")
+    from repro.vision.layers import conv_tap
+    from repro.vision.models import forward_fp
+
+    stats, geom, id2path = _vision_stats_geom(cfg, fp_params)
     absmax: Dict[str, float] = {}
 
     def edge_tap(path, tensor):
@@ -366,4 +397,127 @@ def calibrate_vision(cfg, fp_params, image_batches: Sequence[np.ndarray], *,
                           images=int(np.asarray(imgs).shape[0])):
                 forward_fp(cfg, fp_params, jnp.asarray(imgs, jnp.float32),
                            edge_tap=edge_tap)
+    return stats, absmax
+
+
+def _mean_ce_loss(cfg, params, xs, ys) -> float:
+    """Mean cross-entropy of the fp forward over the labeled batches."""
+    from repro.vision.models import forward_fp
+
+    total = n = 0.0
+    for x, y in zip(xs, ys):
+        logits = forward_fp(cfg, params, x)
+        logp = jax.nn.log_softmax(jnp.asarray(logits, jnp.float32), -1)
+        picked = jnp.take_along_axis(
+            logp, jnp.asarray(y, jnp.int32)[:, None], axis=-1)
+        total += float(-jnp.sum(picked))
+        n += picked.size
+    return total / max(n, 1.0)
+
+
+def _with_quantized_path(fp_params, path: str, w_q):
+    """A shallow-copied param tree with ``path``'s weight replaced."""
+    parts = path.split("/")
+    out = dict(fp_params)
+    node = out
+    for p in parts[:-1]:
+        node[p] = dict(node[p])
+        node = node[p]
+    leaf = dict(node[parts[-1]])
+    leaf["w"] = w_q
+    node[parts[-1]] = leaf
+    return out
+
+
+def _calibrate_vision_task_loss(cfg, fp_params, image_batches, labels, *,
+                                bits, a_bits, group_size):
+    """Task-loss sensitivity: loss degradation per (layer, width) and per
+    (channel group, width), on the deployed per-tensor / per-run grids.
+
+    Only weights are simulated-quantized (activation grids are uniform
+    a_bits everywhere, so the planner's only degree of freedom is weight
+    width — pricing exactly that keeps the signal clean). Group
+    sensitivities quantize one CHUNK-aligned output-channel slice at a
+    time on its *own* per-run grid (`_sim_quant_weights` of the slice) —
+    the precise arithmetic `quantize_conv_layer_segmented` deploys — and
+    are rescaled so groups sum to the layer sensitivity, keeping the
+    knapsack budget commensurable across granularities."""
+    from repro.vision.models import forward_fp, get_path
+
+    if labels is None:
+        raise ValueError("sensitivity='task_loss' needs labels= (one int "
+                         "label array per image batch)")
+    if len(labels) != len(image_batches):
+        raise ValueError(f"{len(image_batches)} image batches but "
+                         f"{len(labels)} label batches")
+    stats, geom, _ = _vision_stats_geom(cfg, fp_params)
+    xs = [jnp.asarray(x, jnp.float32) for x in image_batches]
+    ys = [np.asarray(y) for y in labels]
+
+    # one taped pass for the edge absmax (the activation-grid side) and
+    # per-layer input absmax (PlanRule.a_absmax reporting)
+    absmax: Dict[str, float] = {}
+
+    def edge_tap(path, tensor):
+        absmax[path] = max(absmax.get(path, 0.0),
+                           float(jnp.max(jnp.abs(tensor))))
+
+    from repro.vision.layers import conv_tap
+
+    def input_tap(p, x):
+        w = p.get("w")
+        if w is None:
+            return
+        for path, st in stats.items():
+            if get_path(fp_params, path)["w"] is w:
+                st.a_absmax = max(st.a_absmax,
+                                  float(jnp.max(jnp.abs(x))))
+
+    with conv_tap(input_tap):
+        base_loss = 0.0
+        for x in xs:
+            forward_fp(cfg, fp_params, x, edge_tap=edge_tap)
+        base_loss = _mean_ce_loss(cfg, fp_params, xs, ys)
+
+    with obs.span("calibrate.task_loss", cat="deploy", arch=cfg.name,
+                  paths=len(stats), batches=len(xs),
+                  base_loss=base_loss) as sp:
+        evals = 0
+        for path, st in stats.items():
+            st.sq_ref = 1.0
+            w = jnp.asarray(get_path(fp_params, path)["w"], jnp.float32)
+            d_out = st.d_out
+            n_groups = -(-d_out // group_size)
+            for b in bits:
+                w_q = _sim_quant_weights(w, b)
+                loss_b = _mean_ce_loss(
+                    cfg, _with_quantized_path(fp_params, path, w_q),
+                    xs, ys)
+                evals += 1
+                sens = max(loss_b - base_loss, 0.0)
+                st.sq_err[b] = sens
+                cols = np.zeros((d_out,), np.float64)
+                if n_groups > 1 and geom[path]["kind"] == "conv":
+                    for s in range(0, d_out, group_size):
+                        e = min(s + group_size, d_out)
+                        w_g = w.at[..., s:e].set(
+                            _sim_quant_weights(w[..., s:e], b))
+                        loss_g = _mean_ce_loss(
+                            cfg, _with_quantized_path(fp_params, path,
+                                                      w_g), xs, ys)
+                        evals += 1
+                        cols[s:e] = max(loss_g - base_loss, 0.0) / (e - s)
+                    gsum = cols.sum()
+                    if gsum > 0 and sens > 0:
+                        cols *= sens / gsum
+                    elif sens > 0:
+                        cols[:] = sens / d_out
+                else:
+                    # single group (or depthwise/head): channel detail
+                    # adds nothing — apportion uniformly so col_sens
+                    # stays consistent with sens at every granularity
+                    cols[:] = sens / max(d_out, 1)
+                st.col_sq_err[b] = cols
+            st.taps = len(xs)
+        sp.set(loss_evals=evals)
     return stats, absmax

@@ -1,0 +1,166 @@
+"""Integer-path evaluation of the deployed QAT artifact.
+
+The number that matters is not the float (or fake-quant) model's
+accuracy — it is the accuracy of the *packed integer artifact* the
+serving path runs: `vision.models.quantize_net` -> `forward_int`
+(uint{a_bits} integer images at every edge, int32 accumulation, eq. 3/4
+requantization — through the kernel registry, segmented mixed-precision
+plans included). Everything in `BENCH_accuracy.json` reports this.
+
+`deploy` folds a `qat.train.QATResult` without any re-calibration: the
+EMA/PACT activation ranges ARE the deployment absmax, and the weight
+grids are re-derived by the same `calibrate_weight` statistic the
+fake-quant used, so the integer codes are bit-exactly the codes training
+simulated (`fold_check` asserts this). The residual train/deploy gap is
+f32 vs int32 accumulation order — boundary codes within ~1 LSB, measured
+by `edge_agreement`."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import calibrate_weight
+from repro.core.quantize import dequantize, quantize
+from repro.deploy.policy import PrecisionPlan
+from repro.obs import trace as obs
+from repro.qat import fakequant as fq
+from repro.qat.train import ACT_KEY, QATResult, qat_forward
+from repro.vision.models import (COMPUTE_KINDS, QuantizedVisionNet,
+                                 forward_int, get_path, quantize_input,
+                                 quantize_net)
+
+
+def deploy(result: QATResult, *, plan: Optional[PrecisionPlan] = None,
+           default_w_bits: Optional[int] = None,
+           backend: Optional[str] = None) -> QuantizedVisionNet:
+    """Fold a trained result into the deployable integer artifact.
+
+    Defaults deploy exactly what was trained (the result's plan and
+    w_bits); pass ``plan``/``default_w_bits`` to deploy the same weights
+    under a different quantization (the PTQ rows: float-trained params
+    packed at W{8,4,2})."""
+    if plan is None and default_w_bits is None:
+        plan = result.plan
+    if default_w_bits is None:
+        default_w_bits = result.qc.w_bits or 8
+    return quantize_net(result.cfg, result.model_params(),
+                        result.deployment_absmax(), plan=plan,
+                        default_w_bits=default_w_bits, backend=backend)
+
+
+def evaluate_int(qnet: QuantizedVisionNet, batches, *,
+                 backend: Optional[str] = None, mesh=None) -> dict:
+    """Integer-path accuracy of the deployed artifact over ``batches``
+    of (images, labels). Raw int32 logits; argmax needs no dequant."""
+    correct = n = 0
+    with obs.span("qat.evaluate_int", cat="qat",
+                  net=qnet.cfg.name) as sp:
+        for x, y in batches:
+            x_hat = quantize_input(qnet, jnp.asarray(x, jnp.float32))
+            logits = forward_int(qnet, x_hat, backend=backend, mesh=mesh)
+            preds = np.asarray(jnp.argmax(logits, axis=-1))
+            correct += int((preds == np.asarray(y)).sum())
+            n += len(preds)
+        acc = correct / max(n, 1)
+        sp.set(images=n, accuracy=acc)
+    obs.counter("qat.images_evaluated").add(n)
+    return {"accuracy": acc, "correct": correct, "n": n}
+
+
+def evaluate_fq(result: QATResult, batches) -> dict:
+    """Accuracy of the train-time fake-quant forward (the float view of
+    the same grids) — the reference `evaluate_int` is compared against."""
+    correct = n = 0
+    betas = (result.params[ACT_KEY] if result.qc.learned_absmax
+             else result.absmax)
+    for x, y in batches:
+        logits, _ = qat_forward(result.cfg, result.params,
+                                jnp.asarray(x, jnp.float32), betas,
+                                lquant=result.lquant,
+                                a_bits=result.qc.a_bits,
+                                learned=result.qc.learned_absmax)
+        preds = np.asarray(jnp.argmax(logits, axis=-1))
+        correct += int((preds == np.asarray(y)).sum())
+        n += len(preds)
+    return {"accuracy": correct / max(n, 1), "correct": correct, "n": n}
+
+
+def fold_check(result: QATResult) -> None:
+    """Assert the grid-matching invariant on the trained weights: for
+    every compute layer, the fake-quant values the last training step
+    used are EXACTLY dequantize(quantize(w)) on the deployment grid —
+    same codes, same quantum, zero re-quantization error at fold time.
+    Raises AssertionError with the offending path."""
+    if result.lquant is None:
+        raise ValueError("float-trained result has no quantization to "
+                         "check; train with w_bits or a plan")
+    params = result.model_params()
+    for L in result.cfg.layers:
+        if L.kind not in COMPUTE_KINDS:
+            continue
+        w = jnp.asarray(get_path(params, L.path)["w"], jnp.float32)
+        lq = result.lquant[L.path]
+        runs = lq.segments or ((0, int(w.shape[-1]), lq.w_bits),)
+        fq_w = (fq.fake_quant_weight_segmented(w, lq.segments)
+                if lq.segments is not None
+                else fq.fake_quant_weight(w, lq.w_bits))
+        deployed = []
+        for s, e, b in runs:
+            spec = calibrate_weight(w[..., s:e], b)
+            deployed.append(dequantize(quantize(w[..., s:e], spec), spec))
+        dep = jnp.concatenate(deployed, axis=-1)
+        if not bool(jnp.all(fq_w == dep)):
+            bad = int(jnp.sum(fq_w != dep))
+            raise AssertionError(
+                f"{L.path}: fake-quant values diverge from the deployed "
+                f"grid on {bad} weight(s) — the grid-matching invariant "
+                "is broken")
+
+
+def edge_agreement(result: QATResult, qnet: QuantizedVisionNet,
+                   x_batch) -> dict:
+    """Compare the integer forward's edge codes against the fake-quant
+    forward's values quantized onto the same grids.
+
+    f32 conv accumulation cannot reproduce int32 accumulation to 0.5 ULP
+    of a ~2^20-scale accumulator, so exact equality is not the contract;
+    the honest one (docs/architecture.md) is boundary codes within +-1
+    LSB almost everywhere plus argmax agreement. Returns
+    {"within_1lsb": frac, "max_dev": int, "argmax_agree": frac}."""
+    x = jnp.asarray(x_batch, jnp.float32)
+    betas = result.deployment_absmax()
+
+    fq_edges: Dict[str, jnp.ndarray] = {}
+    logits_fq, _ = qat_forward(
+        result.cfg, result.params, x,
+        {k: jnp.asarray(v) for k, v in betas.items()},
+        lquant=result.lquant, a_bits=result.qc.a_bits,
+        learned=False, edge_tap=lambda p, t: fq_edges.setdefault(p, t))
+
+    int_edges: Dict[str, jnp.ndarray] = {}
+    x_hat = quantize_input(qnet, x)
+    logits_int = forward_int(qnet, x_hat,
+                             collect=lambda p, t: int_edges.setdefault(p, t))
+
+    total = within = 0
+    max_dev = 0
+    a_bits = result.qc.a_bits
+    from repro.core.quantize import QuantSpec
+    for path, fq_val in fq_edges.items():
+        if path not in int_edges or path == "__input__":
+            continue
+        beta = max(betas[path], 1e-6)
+        spec = QuantSpec.activation(a_bits, beta)
+        codes_fq = jnp.round(fq_val / spec.eps).astype(jnp.int32)
+        codes_int = int_edges[path].astype(jnp.int32)
+        dev = jnp.abs(codes_fq - codes_int)
+        total += int(dev.size)
+        within += int(jnp.sum(dev <= 1))
+        max_dev = max(max_dev, int(jnp.max(dev)))
+    agree = float(jnp.mean((jnp.argmax(logits_fq, -1)
+                            == jnp.argmax(logits_int, -1)
+                            ).astype(jnp.float32)))
+    return {"within_1lsb": within / max(total, 1), "max_dev": max_dev,
+            "argmax_agree": agree}

@@ -1,0 +1,149 @@
+"""STE fake-quantization primitives — the grid-matching half of QAT.
+
+Quantization-aware training simulates the deployed integer grids inside
+the float forward (fake-quant: quantize-dequantize) and trains through
+the staircase with the straight-through estimator (Bengio et al.; PACT
+for the learned activation range). The whole value of the exercise rests
+on one invariant, enforced by tests/test_qat.py:
+
+    **Every fake-quant grid here is bit-exactly the grid the deployment
+    pipeline folds.**
+
+Concretely:
+
+* `fake_quant_weight(w, bits)` quantizes on the per-tensor symmetric
+  signed grid of `core.calibration.calibrate_weight` +
+  `core.quantize.quantize` — the grid `vision.layers.quantize_conv_layer`
+  / `quantize_linear_head` deploy. Same absmax floor (1e-8), same
+  round-then-clip, same symmetric int_min = -int_max (2-bit => ternary).
+* `fake_quant_weight(w, bits, per_channel=True)` matches the LM zoo's
+  per-output-channel grids (`nn.layers.quantize_dense_weights`).
+* `fake_quant_weight_segmented(w, runs)` applies a per-tensor grid *per
+  output-channel run* — the exact composition
+  `vision.layers.quantize_conv_layer_segmented` deploys (PR-9 contract:
+  each run is a uniform layer over its column slice).
+* `fake_quant_act(x, beta, bits)` is the unsigned alpha=0 activation grid
+  of `QuantSpec.activation` with `quantize_net`'s 1e-6 beta floor; the
+  clip-at-zero is the paper's ReLU-inherent QNT/ACT semantic.
+
+So a trained model's weight *codes* and activation *grids* transfer into
+`vision.models.quantize_net` without any re-quantization error: the only
+train/deploy divergence left is f32 accumulation order vs exact int32
+accumulation (boundary codes within +-1 LSB; see docs/architecture.md).
+
+Gradient contract: `ste_quantize` differentiates as the clipped-identity
+surrogate (1/eps inside the representable range, 0 outside; the grid
+parameters eps get zero cotangent). Learned activation ranges (PACT)
+flow through the *clip* surrogate instead: d/dbeta = 1 where x >= beta.
+EMA ranges are tracked outside the gradient tape (`ema_update`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+WEIGHT_ABSMAX_FLOOR = 1e-8   # == core.calibration.calibrate_weight /
+                             #    nn.layers.quantize_dense_weights
+ACT_BETA_FLOOR = 1e-6        # == vision.models.quantize_net's absmax floor
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def ste_quantize(t, eps, lo: int, hi: int):
+    """Integer codes ``clip(round(t / eps), lo, hi)`` (f32 values) with a
+    straight-through gradient: d(codes)/dt = 1/eps where t lies inside
+    the representable range [lo*eps, hi*eps], 0 outside — the derivative
+    of the clipped-identity surrogate, scaled onto the code axis. The
+    grid quantum ``eps`` (scalar or per-channel array, broadcastable
+    against ``t``) receives a zero cotangent: ranges are EMA-tracked or
+    PACT-learned through the clip surrogate, never through the rounding.
+    """
+    return jnp.clip(jnp.round(t / eps), lo, hi)
+
+
+def _ste_fwd(t, eps, lo, hi):
+    return ste_quantize(t, eps, lo, hi), (t, eps)
+
+
+def _ste_bwd(lo, hi, res, g):
+    t, eps = res
+    inside = (t >= lo * eps) & (t <= hi * eps)
+    dt = jnp.where(inside, g / eps, 0.0)
+    # broadcast eps: reduce the cotangent back to eps's shape (all-zero,
+    # but it must be shape-correct for jax)
+    return dt.astype(t.dtype), jnp.zeros_like(eps)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def weight_absmax(w, *, per_channel: bool = False):
+    """The deployed grids' absmax statistic, stop-gradded and floored.
+
+    per_channel=False: one scalar (`calibrate_weight`'s per-tensor grid).
+    per_channel=True: per-output-channel over the last axis
+    (`quantize_dense_weights`' reduction for a 2-D (K, N) weight)."""
+    w = jnp.asarray(w)
+    if per_channel:
+        a = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)))
+    else:
+        a = jnp.max(jnp.abs(w))
+    return jax.lax.stop_gradient(jnp.maximum(a, WEIGHT_ABSMAX_FLOOR))
+
+
+def fake_quant_weight(w, bits: int, *, absmax=None,
+                      per_channel: bool = False):
+    """Quantize-dequantize ``w`` on the deployed symmetric signed W{bits}
+    grid, STE gradient. ``absmax`` overrides the observed statistic
+    (already floored/stop-gradded by the caller when given)."""
+    int_max = packing.int_range(bits, True)[1]
+    if absmax is None:
+        absmax = weight_absmax(w, per_channel=per_channel)
+    eps = absmax / int_max
+    return eps * ste_quantize(w, eps, -int_max, int_max)
+
+
+def fake_quant_weight_segmented(w, runs: Sequence[Tuple[int, int, int]]):
+    """Per-run fake-quant over the last (output-channel) axis: each
+    ``(n_start, n_end, bits)`` run gets its own per-tensor grid over its
+    column slice — bit-matching the segmented deployment
+    (`vision.layers.quantize_conv_layer_segmented`), where every run is
+    packed as a uniform layer over that slice."""
+    parts = [fake_quant_weight(w[..., s:e], b) for s, e, b in runs]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def fake_quant_act(x, beta, bits: int, *, learned: bool = False):
+    """Unsigned alpha=0 activation fake-quant (`QuantSpec.activation`).
+
+    The clip at zero *is* the ReLU (the paper folds it into QNT/ACT).
+    EMA mode (default): ``beta`` is a tracked range — stop-gradded here.
+    ``learned=True`` (PACT): gradients reach ``beta`` through the clip
+    surrogate (d/dbeta = 1 where x >= beta)."""
+    int_max = packing.int_range(bits, False)[1]
+    beta = jnp.maximum(jnp.asarray(beta, jnp.float32), ACT_BETA_FLOOR)
+    if not learned:
+        beta = jax.lax.stop_gradient(beta)
+    eps = beta / int_max
+    x_c = jnp.clip(x, 0.0, beta)
+    sg = jax.lax.stop_gradient
+    q = sg(eps) * ste_quantize(sg(x), sg(eps), 0, int_max)
+    return x_c + sg(q - x_c)
+
+
+def batch_absmax(t):
+    """Observed |t| max for range tracking (stop-gradded scalar)."""
+    return jax.lax.stop_gradient(jnp.max(jnp.abs(t)))
+
+
+def ema_update(prev, observed, momentum: float = 0.9):
+    """EMA absmax tracking; a zero-initialized range snaps to the first
+    observation instead of averaging against 0."""
+    observed = jax.lax.stop_gradient(observed)
+    return jnp.where(prev > 0.0,
+                     momentum * prev + (1.0 - momentum) * observed,
+                     observed)

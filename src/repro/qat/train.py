@@ -1,0 +1,328 @@
+"""Jitted QAT loop for the vision nets (fake-quant forward + AdamW).
+
+One training loop serves four roles in the accuracy benchmark:
+
+* **QAT uniform** — ``w_bits in {8,4,2}``: every compute layer's weights
+  fake-quantized per-tensor, every requantizing edge fake-quantized on
+  the unsigned a_bits grid (EMA-tracked absmax; ``learned_absmax=True``
+  switches to PACT learned ranges).
+* **QAT planned** — ``plan=`` a `PrecisionPlan`: per-layer widths (and
+  per-output-channel-run segment widths, PR-9) resolved through the same
+  `resolve_qcfg` the deployment packer uses, so training quantizes
+  exactly what will deploy.
+* **Float / PTQ baseline** — ``w_bits=None``: plain float training; the
+  EMA absmax tracker still runs, so the trained result carries its own
+  activation calibration for the post-training-quantization rows.
+* **Fine-tune from checkpoint** — ``from_ckpt=`` restores a previous
+  state (`repro.ckpt`) and continues (the `launch.qat --from-ckpt` path).
+
+The fake-quant forward mirrors `vision.models.forward_fp` edge-for-edge:
+requantizing layers (conv, dwconv, global avg-pool, residual add) get an
+activation fake-quant at their output; grid-preserving layers (max pool)
+inherit; the head emits raw float logits (deployment keeps raw int32
+logits — argmax needs no grid). Saved side edges carry the *fake-quanted*
+value, matching the deployed dataflow where skips read integer images.
+
+Optimizer is the shared `train.optimizer` AdamW (cosine schedule, decay
+on matrices only — so EMA/PACT scalars are never decayed). ``mesh=``
+shards the image batch data-parallel over ``mesh.shape['data']`` devices
+(the `parallel/` dp path); state stays replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.deploy.policy import PrecisionPlan, resolve_qcfg
+from repro.nn.layers import QuantConfig
+from repro.obs import trace as obs
+from repro.qat import fakequant as fq
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+from repro.vision import layers as vl
+from repro.vision.models import COMPUTE_KINDS, VisionConfig, get_path
+
+ACT_KEY = "__act_absmax__"   # learned-range leaves live inside params
+
+
+@dataclasses.dataclass(frozen=True)
+class QATConfig:
+    steps: int = 200
+    batch: int = 64
+    lr: float = 1e-2
+    warmup: int = 20
+    weight_decay: float = 1e-4
+    clip_norm: float = 1.0
+    w_bits: Optional[int] = 8     # None => float training (PTQ baseline)
+    a_bits: int = 8
+    ema_momentum: float = 0.9
+    learned_absmax: bool = False  # PACT learned ranges instead of EMA
+    seed: int = 0
+    log_every: int = 20
+    ckpt_every: int = 50
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerQuant:
+    """Static per-compute-layer quantization resolved from the plan."""
+
+    w_bits: int
+    segments: Optional[Tuple[Tuple[int, int, int], ...]] = None
+
+
+def resolve_layer_quant(cfg: VisionConfig, plan: Optional[PrecisionPlan],
+                        default_w_bits: int, a_bits: int
+                        ) -> Dict[str, LayerQuant]:
+    """Per-path (w_bits, segments) through the deployment's own
+    `resolve_qcfg` — training and packing can never disagree on widths."""
+    base = QuantConfig(mode="int", w_bits=default_w_bits, a_bits=a_bits)
+    out = {}
+    for L in cfg.layers:
+        if L.kind not in COMPUTE_KINDS:
+            continue
+        qcfg = resolve_qcfg(plan, L.path, base)
+        segs = (tuple(tuple(r) for r in qcfg.segments)
+                if qcfg.segments is not None else None)
+        out[L.path] = LayerQuant(w_bits=qcfg.w_bits, segments=segs)
+    return out
+
+
+def _fq_w(w, lq: Optional[LayerQuant]):
+    if lq is None:
+        return w
+    if lq.segments is not None:
+        return fq.fake_quant_weight_segmented(w, lq.segments)
+    return fq.fake_quant_weight(w, lq.w_bits)
+
+
+def qat_forward(cfg: VisionConfig, params: dict, x, betas: Dict[str, jnp.ndarray],
+                *, lquant: Optional[Dict[str, LayerQuant]], a_bits: int,
+                learned: bool = False,
+                edge_tap: Optional[Callable] = None):
+    """Fake-quant forward; returns (float logits, observed absmax).
+
+    ``lquant=None`` disables all fake-quant (float forward) while still
+    observing ranges. ``observed`` maps "__input__" and every
+    requantizing layer path to the batch's pre-quantization absmax (the
+    EMA update signal). ``edge_tap(path, fq_value)`` observes every
+    fake-quanted edge (the fold-losslessness tests)."""
+    quant = lquant is not None
+    observed: Dict[str, jnp.ndarray] = {}
+
+    def act(path, t, relu=False):
+        # float mode mirrors forward_fp exactly (ReLU only where the fp
+        # graph has one); quant mode's clip-at-zero IS the ReLU, and on
+        # the relu-free edges (add/avgpool/input) operands are already
+        # non-negative unsigned images, so the clip is a no-op there
+        observed[path] = fq.batch_absmax(t)
+        if not quant:
+            return jnp.maximum(t, 0.0) if relu else t
+        y = fq.fake_quant_act(t, betas[path], a_bits, learned=learned)
+        if edge_tap is not None:
+            edge_tap(path, y)
+        return y
+
+    stream = act("__input__", x)
+    edges: Dict[str, jnp.ndarray] = {}
+    for L in cfg.layers:
+        xin = edges[L.input_from] if L.input_from else stream
+        if L.kind == "conv":
+            p = get_path(params, L.path)
+            w = _fq_w(p["w"], lquant.get(L.path) if quant else None)
+            y = vl.conv2d_raw(xin, w, stride=L.stride, padding=L.padding)
+            y = y * p["bn_scale"] + p["bn_bias"]
+            y = act(L.path, y, relu=True)
+        elif L.kind == "dwconv":
+            p = get_path(params, L.path)
+            w = _fq_w(p["w"], lquant.get(L.path) if quant else None)
+            c = w.shape[-1]
+            y = vl.conv2d_raw(xin, w.reshape(*w.shape[:2], 1, c),
+                              stride=L.stride, padding=L.padding, groups=c)
+            y = y * p["bn_scale"] + p["bn_bias"]
+            y = act(L.path, y, relu=True)
+        elif L.kind == "maxpool":
+            y = vl.maxpool_fp(xin, L.window, L.stride)   # grid-preserving
+        elif L.kind == "avgpool_global":
+            y = act(L.path, vl.avgpool_global_fp(xin))
+        elif L.kind == "add":
+            y = act(L.path, xin + edges[L.skip_from])
+        elif L.kind == "linear":
+            p = get_path(params, L.path)
+            w = _fq_w(p["w"], lquant.get(L.path) if quant else None)
+            y = xin @ w                                  # raw logits
+        else:
+            raise ValueError(f"{L.path}: unknown kind {L.kind!r}")
+        if L.save_as:
+            edges[L.save_as] = y
+        if not L.branch:
+            stream = y
+    return stream, observed
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None],
+                                         axis=-1))
+
+
+def make_qat_step(cfg: VisionConfig, qc: QATConfig,
+                  lquant: Optional[Dict[str, LayerQuant]],
+                  opt_cfg: OptConfig):
+    """One jit-able (state, batch) -> (state, metrics) QAT step."""
+
+    def loss_fn(params, absmax, x, y):
+        betas = params[ACT_KEY] if qc.learned_absmax else absmax
+        logits, observed = qat_forward(
+            cfg, params, x, betas, lquant=lquant, a_bits=qc.a_bits,
+            learned=qc.learned_absmax)
+        loss = cross_entropy(logits, y)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return loss, (observed, acc)
+
+    def step(state, batch):
+        (loss, (observed, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], state["absmax"],
+                                   batch["x"], batch["y"])
+        new_p, new_opt, om = adamw_update(state["params"], grads,
+                                          state["opt"], opt_cfg)
+        new_absmax = {k: fq.ema_update(v, observed[k], qc.ema_momentum)
+                      for k, v in state["absmax"].items()}
+        return ({"params": new_p, "absmax": new_absmax, "opt": new_opt},
+                {"loss": loss, "acc": acc, **om})
+
+    return step
+
+
+def _absmax_paths(cfg: VisionConfig):
+    """The edges that carry their own activation grid at deployment:
+    the net input plus every requantizing layer (`quantize_net`'s
+    `out_spec` calls)."""
+    paths = ["__input__"]
+    for L in cfg.layers:
+        if L.kind in ("conv", "dwconv", "avgpool_global", "add"):
+            paths.append(L.path)
+    return paths
+
+
+@dataclasses.dataclass
+class QATResult:
+    """Trained artifact: params + activation ranges + the quantization
+    the net was trained under (what `qat.evaluate.deploy` folds)."""
+
+    cfg: VisionConfig
+    qc: QATConfig
+    params: dict                      # may carry ACT_KEY learned ranges
+    absmax: Dict[str, jnp.ndarray]    # EMA-tracked per-edge ranges
+    lquant: Optional[Dict[str, LayerQuant]]
+    plan: Optional[PrecisionPlan]
+    log: list
+
+    def model_params(self) -> dict:
+        """Params without the learned-range leaves (what deploys)."""
+        return {k: v for k, v in self.params.items() if k != ACT_KEY}
+
+    def deployment_absmax(self) -> Dict[str, float]:
+        """Per-edge absmax for `vision.models.quantize_net` — the
+        trained ranges ARE the deployment calibration (no re-calibration
+        pass: the grids fold identically by construction)."""
+        src = (self.params[ACT_KEY] if self.qc.learned_absmax
+               else self.absmax)
+        return {k: float(v) for k, v in src.items()}
+
+
+def train_qat(cfg: VisionConfig, data, qc: QATConfig, *,
+              plan: Optional[PrecisionPlan] = None,
+              init_params: Optional[dict] = None,
+              mesh=None, ckpt_dir=None, from_ckpt=None) -> QATResult:
+    """Train ``cfg`` on ``data`` (the `qat.data` iterator API).
+
+    ``plan`` resolves per-layer (segmented) widths; ``mesh`` shards the
+    batch over the 'data' axis; ``ckpt_dir``/``from_ckpt`` save/resume
+    full training state through `repro.ckpt.checkpoint`."""
+    from repro.vision.models import init_fp
+
+    lquant = (None if qc.w_bits is None and plan is None
+              else resolve_layer_quant(cfg, plan, qc.w_bits or 8,
+                                       qc.a_bits))
+    opt_cfg = OptConfig(lr=qc.lr, warmup=qc.warmup, total_steps=qc.steps,
+                        weight_decay=qc.weight_decay,
+                        clip_norm=qc.clip_norm)
+
+    batches = data.batches(qc.batch, qc.steps)
+    start_step = 0
+    if from_ckpt is not None:
+        from repro.ckpt import checkpoint as ckpt
+        state, start_step = ckpt.restore(from_ckpt)
+    else:
+        if init_params is not None:
+            params = init_params
+        else:
+            # init_fp's bn_scale ~0.4 is tuned for the deploy smoke
+            # nets' activation headroom; training from scratch through
+            # three such attenuating affines stalls (the "BN" here is a
+            # fixed fold-style affine, not a normalizer). Unit scale
+            # trains cleanly and the EMA absmax adapts the grids anyway.
+            params = init_fp(cfg, seed=qc.seed)
+            for L in cfg.layers:
+                if L.kind in ("conv", "dwconv"):
+                    node = dict(get_path(params, L.path))
+                    node["bn_scale"] = jnp.ones_like(node["bn_scale"])
+                    parts = L.path.split("/")
+                    parent = params
+                    for p in parts[:-1]:
+                        parent = parent[p]
+                    parent[parts[-1]] = node
+        # seed the ranges from one real batch (deterministic: the
+        # observation forward is float and tap-free) so step 0 already
+        # fake-quantizes on sane grids
+        x0, y0 = next(batches)
+        _, obs0 = qat_forward(cfg, params, jnp.asarray(x0), {},
+                              lquant=None, a_bits=qc.a_bits)
+        absmax = {k: jnp.asarray(float(obs0[k]), jnp.float32)
+                  for k in _absmax_paths(cfg)}
+        if qc.learned_absmax:
+            params = dict(params)
+            params[ACT_KEY] = {k: jnp.asarray(float(obs0[k]), jnp.float32)
+                               for k in _absmax_paths(cfg)}
+        state = {"params": params, "absmax": absmax,
+                 "opt": adamw_init(params, opt_cfg)}
+
+    step_fn = jax.jit(make_qat_step(cfg, qc, lquant, opt_cfg))
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        data_shard = NamedSharding(mesh, P("data"))
+
+    log = []
+    with obs.span("qat.train", cat="qat", net=cfg.name,
+                  steps=qc.steps, w_bits=(qc.w_bits or 0),
+                  a_bits=qc.a_bits, planned=plan is not None) as sp:
+        for i in range(start_step, qc.steps):
+            try:
+                x, y = next(batches)
+            except StopIteration:
+                batches = data.batches(qc.batch, qc.steps)
+                x, y = next(batches)
+            batch = {"x": jnp.asarray(x, jnp.float32),
+                     "y": jnp.asarray(y, jnp.int32)}
+            if mesh is not None:
+                batch = {k: jax.device_put(v, data_shard)
+                         for k, v in batch.items()}
+            state, metrics = step_fn(state, batch)
+            obs.counter("qat.steps").add(1)
+            if (i % qc.log_every == 0) or (i == qc.steps - 1):
+                log.append({"step": i,
+                            "loss": float(metrics["loss"]),
+                            "acc": float(metrics["acc"])})
+            if ckpt_dir is not None and ((i + 1) % qc.ckpt_every == 0
+                                         or i == qc.steps - 1):
+                from repro.ckpt import checkpoint as ckpt
+                ckpt.save(ckpt_dir, i + 1, state)
+        if log:
+            sp.set(final_loss=log[-1]["loss"], final_acc=log[-1]["acc"])
+
+    return QATResult(cfg=cfg, qc=qc, params=state["params"],
+                     absmax=state["absmax"], lquant=lquant, plan=plan,
+                     log=log)

@@ -15,23 +15,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-BLOCK = 256
+from repro.core.quantize import (BLOCK, dequantize_int8_blockwise,
+                                 quantize_int8_blockwise)
 
-
-def _quant_block(x):
-    n = x.size
-    pad = (-n) % BLOCK
-    xb = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, BLOCK)
-    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0,
-                        1e-12)
-    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
-    return codes, scale
-
-
-def _dequant_block(codes, scale, shape):
-    import math
-    x = codes.astype(jnp.float32) * scale
-    return x.reshape(-1)[: math.prod(shape)].reshape(shape)
+# the blockwise codec is shared repo-wide (core.quantize); these aliases
+# keep the wire-format call sites and their tests stable
+_quant_block = quantize_int8_blockwise
+_dequant_block = dequantize_int8_blockwise
 
 
 def compress_grads(grads, error_feedback):

@@ -17,6 +17,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import (dequantize_int8_rowwise,
+                                 quantize_int8_rowwise)
 
 BLOCK = 256  # int8 state block size
 
@@ -54,15 +56,10 @@ def _schedule(cfg: OptConfig, step):
 _LOG_FLOOR = 1e-30
 
 
-def _q8_lin(x):
-    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return {"codes": codes, "scale": scale[..., 0]}
-
-
-def _dq8_lin(s, shape):
-    return s["codes"].astype(jnp.float32) * s["scale"][..., None]
+# the linear rowwise codec is shared repo-wide (core.quantize); the
+# log-scale one below is optimizer-specific (v's dynamic range)
+_q8_lin = quantize_int8_rowwise
+_dq8_lin = dequantize_int8_rowwise
 
 
 def _q8_log(x):

@@ -6,10 +6,12 @@ one registry the CLIs/benchmarks/tests resolve names through.
 from __future__ import annotations
 
 from repro.vision.configs.mobilenet_v1 import mobilenet_v1_tiny
+from repro.vision.configs.qat_cnn import qat_cnn
 from repro.vision.configs.resnet8 import resnet8
 
 VISION_CONFIGS = {
     "mobilenet-tiny": mobilenet_v1_tiny,
+    "qat-cnn": qat_cnn,
     "resnet8": resnet8,
 }
 

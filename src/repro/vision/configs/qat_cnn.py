@@ -1,0 +1,38 @@
+"""The QAT digit CNN: 16x16x1 in, BitNetMCU-scale, channel-group-wide.
+
+The accuracy benchmark's network. Three design constraints:
+
+* MNIST-scale input (16x16 grayscale, 10 classes) so a full QAT ->
+  deploy -> integer-eval loop runs in CPU minutes (the hermetic
+  `repro.qat.data` digits);
+* a 256-channel final conv: wider than one `packing.CHUNK` (128), so the
+  channel-group planner has *real* groups to demote independently and
+  `PlanRule.segments` plans are exercised end to end (every other layer
+  fits in one group, where fine == layer granularity by construction);
+* plain conv/pool graph (no residuals) — accuracy differences between
+  W8/W4/W2 come from the quantization, not from graph exotica.
+
+The smoke variant shrinks widths (tier-1: 20-step loss-decrease + fold
+bit-exactness) — too narrow for channel groups, which is exactly why the
+full variant exists.
+"""
+from __future__ import annotations
+
+from repro.vision.models import LayerDef, VisionConfig
+
+
+def qat_cnn(smoke: bool = False, a_bits: int = 8) -> VisionConfig:
+    c1, c2, c3 = (8, 16, 32) if smoke else (16, 32, 256)
+    layers = (
+        LayerDef(path="c1", kind="conv", cout=c1),
+        LayerDef(path="p1", kind="maxpool"),              # 16 -> 8
+        LayerDef(path="c2", kind="conv", cout=c2),
+        LayerDef(path="p2", kind="maxpool"),              # 8 -> 4
+        LayerDef(path="c3", kind="conv", cout=c3),
+        LayerDef(path="pool", kind="avgpool_global"),
+        LayerDef(path="head", kind="linear", cout=10),
+    )
+    return VisionConfig(
+        name="qat-cnn" + ("-smoke" if smoke else ""),
+        layers=layers, num_classes=10, in_hw=(16, 16), in_ch=1,
+        a_bits=a_bits)

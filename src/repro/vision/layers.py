@@ -325,6 +325,54 @@ def quantize_conv_layer(p, spec_x: QuantSpec, spec_y: QuantSpec,
     return QConv2D(conv=conv, backend=backend)
 
 
+@dataclasses.dataclass(frozen=True)
+class QSegmentedConv2D:
+    """Fine-grain mixed-precision conv: one uniform `QConv2D` per
+    output-channel run, outputs concatenated along cout.
+
+    This is the PR-9 composition contract applied to the conv layers:
+    each ``(n_start, n_end, w_bits)`` run of the plan's segments is
+    quantized as a *uniform layer over its column slice* — its own
+    per-tensor weight grid (`calibrate_weight` on the slice) and its own
+    eq. 3/4 fold, exactly what `SegmentedLinearParams.segment_params`
+    defines as the segmented container's meaning. Per-run artifacts are
+    byte-identical to a uniform layer of that slice, so the whole-layer
+    output is bit-exact against any fused mixed-operand execution."""
+
+    runs: Tuple[Tuple[int, int, int], ...]
+    parts: Tuple[QConv2D, ...]
+
+    def apply(self, x_hat, *, backend: Optional[str] = None, mesh=None):
+        return jnp.concatenate(
+            [p.apply(x_hat, backend=backend, mesh=mesh)
+             for p in self.parts], axis=-1)
+
+
+def quantize_conv_layer_segmented(p, spec_x: QuantSpec, spec_y: QuantSpec,
+                                  runs, *, stride: int, padding: int,
+                                  backend: Optional[str] = None
+                                  ) -> QSegmentedConv2D:
+    """fp conv node + plan segments -> per-run quantized conv.
+
+    ``runs``: CHUNK-aligned ``(n_start, n_end, w_bits)`` output-channel
+    runs covering [0, cout) (`PlanRule.segments`). Every run re-slices
+    the BN fold too — (kappa, lam, m, d) are per-run, matching the
+    uniform layer each run is defined to be."""
+    runs = tuple(tuple(int(v) for v in r) for r in runs)
+    cout = int(p["w"].shape[-1])
+    if runs[0][0] != 0 or runs[-1][1] != cout or any(
+            runs[i][1] != runs[i + 1][0] for i in range(len(runs) - 1)):
+        raise ValueError(f"segments {runs} do not tile [0, {cout})")
+    parts = []
+    for s, e, b in runs:
+        sub = {"w": p["w"][..., s:e], "bn_scale": p["bn_scale"][s:e],
+               "bn_bias": p["bn_bias"][s:e]}
+        parts.append(quantize_conv_layer(
+            sub, spec_x, spec_y, b, stride=stride, padding=padding,
+            backend=backend))
+    return QSegmentedConv2D(runs=runs, parts=tuple(parts))
+
+
 def quantize_depthwise(p, spec_x: QuantSpec, spec_y: QuantSpec,
                        w_bits: int, *, stride: int, padding: int,
                        backend: Optional[str] = None) -> QDepthwiseConv2D:

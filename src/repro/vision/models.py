@@ -238,12 +238,18 @@ class QuantizedVisionNet:
     plan: Optional[PrecisionPlan] = None
 
     def layer_bits(self) -> Dict[str, int]:
-        """path -> w_bits for the plan-addressable layers (reporting)."""
+        """path -> w_bits for the plan-addressable layers (reporting);
+        segmented convs report their widest run (the `PlanRule.w_bits`
+        convention)."""
         out = {}
         for L, q in self.qlayers:
-            if L.kind in ("conv", "dwconv"):
-                g = q.conv.gemm if L.kind == "conv" else q.gemm
-                out[L.path] = g.w_bits
+            if L.kind == "conv":
+                if isinstance(q, vl.QSegmentedConv2D):
+                    out[L.path] = max(p.conv.gemm.w_bits for p in q.parts)
+                else:
+                    out[L.path] = q.conv.gemm.w_bits
+            elif L.kind == "dwconv":
+                out[L.path] = q.gemm.w_bits
             elif L.kind == "linear":
                 out[L.path] = q.gemm.w_bits
         return out
@@ -282,10 +288,23 @@ def quantize_net(cfg: VisionConfig, fp_params: dict, absmax: dict, *,
                        and qcfg.backend is not None else backend)
         if L.kind == "conv":
             spec_y = out_spec(L.path)
-            q = vl.quantize_conv_layer(
-                get_path(fp_params, L.path), spec_x, spec_y, qcfg.w_bits,
-                stride=L.stride, padding=L.padding, backend=lyr_backend)
+            if qcfg.segments is not None:
+                q = vl.quantize_conv_layer_segmented(
+                    get_path(fp_params, L.path), spec_x, spec_y,
+                    qcfg.segments, stride=L.stride, padding=L.padding,
+                    backend=lyr_backend)
+            else:
+                q = vl.quantize_conv_layer(
+                    get_path(fp_params, L.path), spec_x, spec_y,
+                    qcfg.w_bits, stride=L.stride, padding=L.padding,
+                    backend=lyr_backend)
         elif L.kind == "dwconv":
+            if qcfg.segments is not None:
+                raise NotImplementedError(
+                    f"{L.path}: segmented plans are not supported on "
+                    "depthwise layers (per-channel grids make channel-"
+                    "group demotion a per-layer width change; plan with "
+                    "granularity='layer' for depthwise nets)")
             spec_y = out_spec(L.path)
             q = vl.quantize_depthwise(
                 get_path(fp_params, L.path), spec_x, spec_y, qcfg.w_bits,
@@ -306,6 +325,11 @@ def quantize_net(cfg: VisionConfig, fp_params: dict, absmax: dict, *,
                                             spec_y.eps)
             q = vl.QResidualAdd(m1=m1, m2=m2, d=d, out_bits=cfg.a_bits)
         elif L.kind == "linear":
+            if qcfg.segments is not None:
+                raise NotImplementedError(
+                    f"{L.path}: segmented plans are not supported on the "
+                    "classifier head (d_out = num_classes < CHUNK, so "
+                    "the planner never splits it)")
             q, eps_logits = vl.quantize_linear_head(
                 get_path(fp_params, L.path), spec_x, qcfg.w_bits,
                 backend=lyr_backend)
@@ -365,13 +389,16 @@ def streamed_weight_bytes(qnet: QuantizedVisionNet) -> int:
     total = 0
     for L, q in qnet.qlayers:
         if L.kind == "conv":
-            g = q.conv.gemm
+            gemms = ([p.conv.gemm for p in q.parts]
+                     if isinstance(q, vl.QSegmentedConv2D) else
+                     [q.conv.gemm])
         elif L.kind in ("dwconv", "linear"):
-            g = q.gemm
+            gemms = [q.gemm]
         else:
             continue
-        for arr in (g.w_packed, g.kappa, g.lam, g.m):
-            total += arr.size * arr.dtype.itemsize
+        for g in gemms:
+            for arr in (g.w_packed, g.kappa, g.lam, g.m):
+                total += arr.size * arr.dtype.itemsize
     return total
 
 

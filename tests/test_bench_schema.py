@@ -257,6 +257,87 @@ def test_serving_rejects(mutate, match):
         schema.validate_serving(_mutated(SERVING_OK, mutate))
 
 
+# ------------------------------------------------------------ accuracy ---
+
+def _accuracy_row(name, mode, plan, w_bits, acc, bytes_, seg=0):
+    return {"name": name, "mode": mode, "plan": plan, "w_bits": w_bits,
+            "accuracy": acc, "correct": int(acc * 1000), "n": 1000,
+            "packed_weight_bytes": bytes_, "train_steps": 600,
+            "segmented_rules": seg}
+
+
+ACCURACY_OK = {
+    "version": 1, "net": "qat-cnn", "mode": "full",
+    "dataset": {"name": "synthetic-digits", "noise": 0.45, "jitter": 3,
+                "seed": 0, "eval_images": 1000},
+    "budget_frac": 0.35,
+    "path": "repro.vision.models.forward_int",
+    "rows": [
+        _accuracy_row("float", "float", "none", 32, 0.934, 326592),
+        _accuracy_row("ptq_w8", "ptq", "uniform", 8, 0.928, 114872),
+        _accuracy_row("qat_w8", "qat", "uniform", 8, 0.952, 114872),
+        _accuracy_row("ptq_w4", "ptq", "uniform", 4, 0.874, 59320),
+        _accuracy_row("qat_w4", "qat", "uniform", 4, 0.931, 59320),
+        _accuracy_row("ptq_w2", "ptq", "uniform", 2, 0.103, 31544),
+        _accuracy_row("qat_w2", "qat", "uniform", 2, 0.251, 31544),
+        _accuracy_row("ptq_plan_layer", "ptq", "layer", 0, 0.315, 58168),
+        _accuracy_row("qat_plan_layer", "qat", "layer", 0, 0.889, 58168),
+        _accuracy_row("ptq_plan_channel_group", "ptq", "channel_group",
+                      0, 0.528, 46520, seg=1),
+        _accuracy_row("qat_plan_channel_group", "qat", "channel_group",
+                      0, 0.921, 46520, seg=1),
+    ],
+    "acceptance": {"qat_ge_ptq_w4": True, "qat_ge_ptq_w2": True,
+                   "plans_on_frontier": True,
+                   "fine_dominates_layer": True, "all": True},
+}
+
+
+def test_accuracy_fixture_valid():
+    schema.validate_accuracy(ACCURACY_OK)
+
+
+def test_accuracy_smoke_mode_skips_gates():
+    p = _mutated(ACCURACY_OK, lambda p: p.update(mode="smoke"))
+    p["rows"][6]["accuracy"] = 0.01          # qat_w2 below ptq_w2
+    schema.validate_accuracy(p)              # gates off, shapes still on
+    with pytest.raises(SchemaError, match="missing required field"):
+        schema.validate_accuracy(
+            _mutated(p, lambda q: q["rows"][0].pop("packed_weight_bytes")))
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda p: p.pop("dataset"), "missing required field 'dataset'"),
+    (lambda p: p.update(budget_frac=1.5), "out of range"),
+    (lambda p: p["rows"][0].update(mode="train"), "out of range"),
+    (lambda p: p["rows"][0].update(accuracy=1.2), "out of range"),
+    (lambda p: p["rows"][0].update(accuracy=True), "got bool"),
+    (lambda p: p["rows"][1].update(correct=2000),
+     "correct 2000 > n 1000"),
+    (lambda p: p.update(rows=[r for r in p["rows"]
+                              if r["name"] != "qat_w4"]),
+     "missing uniform row mode=qat w_bits=4"),
+    (lambda p: p["acceptance"].pop("fine_dominates_layer"),
+     "missing required field"),
+    # gates recomputed from rows — lying booleans don't help:
+    (lambda p: p["rows"][6].update(accuracy=0.01),
+     "QAT .* below PTQ .* at W2"),
+    (lambda p: p["rows"][4].update(accuracy=0.5),
+     "QAT .* below PTQ .* at W4"),
+    # a uniform row that dominates a plan row breaks the frontier gate
+    (lambda p: p["rows"][8].update(accuracy=0.2, packed_weight_bytes=99999),
+     "dominates qat_plan_layer"),
+    # channel_group must dominate-or-match layer (bytes AND accuracy)
+    (lambda p: p["rows"][10].update(accuracy=0.7),
+     "does not dominate-or-match"),
+    (lambda p: p["acceptance"].update(all=False),
+     "gates hold but 'all' is false"),
+])
+def test_accuracy_rejects(mutate, match):
+    with pytest.raises(SchemaError, match=match):
+        schema.validate_accuracy(_mutated(ACCURACY_OK, mutate))
+
+
 # --------------------------------------------------------------- trace ---
 
 def test_trace_fixture_valid():
@@ -319,6 +400,7 @@ def test_validate_file_dispatch(tmp_path):
                           ("BENCH_cluster.json", CLUSTER_OK),
                           ("BENCH_e2e.json", E2E_OK),
                           ("BENCH_serving.json", SERVING_OK),
+                          ("BENCH_accuracy.json", ACCURACY_OK),
                           ("BENCH_trace.json", TRACE_OK)):
         f = tmp_path / name
         f.write_text(json.dumps(payload))

@@ -1,0 +1,119 @@
+"""The shared int8 side-channel codecs (`core.quantize`) against pinned
+verbatim copies of the private helpers they replaced.
+
+`train/optimizer._q8_lin/_dq8_lin` (rowwise optimizer-state codec) and
+`train/compress._quant_block/_dequant_block` (blockwise gradient wire)
+were byte-for-byte duplicates of the same absmax/127 int8 grid; they now
+alias `core.quantize.quantize_int8_{rowwise,blockwise}`. These tests pin
+the ORIGINAL implementations inline — if the shared codec ever drifts
+(different floor, rounding, clip, pad), saved int8 optimizer states and
+the gradient wire format silently change, so drift must fail loudly here.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import (BLOCK, dequantize_int8_blockwise,
+                                 dequantize_int8_rowwise,
+                                 quantize_int8_blockwise,
+                                 quantize_int8_rowwise)
+from repro.train import compress, optimizer
+
+
+# --- pinned originals (pre-dedupe train/optimizer.py @ 5387649) ----------
+
+def _orig_q8_lin(x):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"codes": codes, "scale": scale[..., 0]}
+
+
+def _orig_dq8_lin(s, shape):
+    return s["codes"].astype(jnp.float32) * s["scale"][..., None]
+
+
+# --- pinned originals (pre-dedupe train/compress.py @ 5387649) -----------
+
+_ORIG_BLOCK = 256
+
+
+def _orig_quant_block(x):
+    n = x.size
+    pad = (-n) % _ORIG_BLOCK
+    xb = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, _ORIG_BLOCK)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _orig_dequant_block(codes, scale, shape):
+    import math
+    x = codes.astype(jnp.float32) * scale
+    return x.reshape(-1)[: math.prod(shape)].reshape(shape)
+
+
+CASES = [
+    np.zeros((4, 8), np.float32),
+    np.ones((3, 300), np.float32) * 1e-15,          # below the scale floor
+    np.linspace(-5, 5, 257, dtype=np.float32)[None, :],
+    np.random.default_rng(7).normal(size=(5, 17, 64)).astype(np.float32),
+    np.random.default_rng(8).normal(scale=1e4, size=(1, 1000)).astype(
+        np.float32),
+]
+
+
+@pytest.mark.parametrize("i", range(len(CASES)))
+def test_rowwise_matches_pinned_original(i):
+    x = jnp.asarray(CASES[i])
+    got, want = quantize_int8_rowwise(x), _orig_q8_lin(x)
+    assert got["codes"].dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got["codes"]),
+                                  np.asarray(want["codes"]))
+    np.testing.assert_array_equal(np.asarray(got["scale"]),
+                                  np.asarray(want["scale"]))
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_int8_rowwise(got, x.shape)),
+        np.asarray(_orig_dq8_lin(want, x.shape)))
+
+
+@pytest.mark.parametrize("i", range(len(CASES)))
+def test_blockwise_matches_pinned_original(i):
+    x = jnp.asarray(CASES[i])
+    gc, gs = quantize_int8_blockwise(x)
+    wc, ws = _orig_quant_block(x)
+    assert gc.dtype == jnp.int8 and gc.shape[1] == BLOCK
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_int8_blockwise(gc, gs, x.shape)),
+        np.asarray(_orig_dequant_block(wc, ws, x.shape)))
+
+
+def test_consumers_alias_the_shared_codecs():
+    # the dedupe contract: both modules now *are* the shared codecs
+    assert optimizer._q8_lin is quantize_int8_rowwise
+    assert optimizer._dq8_lin is dequantize_int8_rowwise
+    assert compress._quant_block is quantize_int8_blockwise
+    assert compress._dequant_block is dequantize_int8_blockwise
+    assert compress.BLOCK == BLOCK == _ORIG_BLOCK == optimizer.BLOCK
+
+
+def test_rowwise_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(9, 128)).astype(
+        np.float32))
+    r = dequantize_int8_rowwise(quantize_int8_rowwise(x), x.shape)
+    # half-LSB per row: eps = rowmax/127
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1) / 127.0) * 0.5 + 1e-7
+    err = np.asarray(jnp.max(jnp.abs(r - x), axis=-1))
+    assert (err <= bound).all()
+
+
+def test_blockwise_pad_cropped():
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(3, 7, 13)).astype(
+        np.float32))   # 273 elements: one partial block
+    codes, scale = quantize_int8_blockwise(x)
+    assert codes.shape == (2, BLOCK)
+    y = dequantize_int8_blockwise(codes, scale, x.shape)
+    assert y.shape == x.shape

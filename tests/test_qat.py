@@ -1,0 +1,291 @@
+"""QAT subsystem: STE gradients, grid bit-exactness, fold losslessness,
+task-loss calibration, dataset hermeticity, and the train->deploy loop.
+
+The subsystem's load-bearing invariant is **grid matching**: the fake
+quantizers in `repro.qat.fakequant` must land on exactly the grids the
+deployment path (`core.quantize.QuantSpec` via `calibrate_weight` /
+`quantize_dense_weights`) packs — otherwise "QAT" trains a model for an
+arithmetic that never ships. Every numeric test here compares against
+the deployment helpers, never against a reimplementation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.calibration import calibrate_weight
+from repro.core.quantize import QuantSpec, dequantize, quantize
+from repro.nn.layers import quantize_dense_weights
+from repro.qat import fakequant as fq
+from repro.qat.data import SyntheticDigits, make_dataset
+from repro.qat.evaluate import (deploy, edge_agreement, evaluate_fq,
+                                evaluate_int, fold_check)
+from repro.qat.train import (QATConfig, resolve_layer_quant, train_qat)
+from repro.vision.configs import get_vision_config
+
+BITS = (8, 4, 2)
+
+
+# ------------------------------------------------------------- STE ------
+
+def test_ste_forward_matches_integer_grid(rng):
+    t = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    eps = jnp.float32(0.037)
+    got = fq.ste_quantize(t, eps, -7, 7)
+    want = jnp.clip(jnp.round(t / eps), -7, 7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ste_gradient_is_masked_identity(rng):
+    """d/dt [eps * ste(t)] == 1 inside [lo*eps, hi*eps], 0 outside —
+    the straight-through contract, checked point by point."""
+    eps = 0.1
+    t = jnp.asarray(np.linspace(-1.5, 1.5, 61).astype(np.float32))
+    g = jax.grad(lambda v: jnp.sum(eps * fq.ste_quantize(v, eps, -7, 7)))(t)
+    inside = (np.asarray(t) >= -7 * eps) & (np.asarray(t) <= 7 * eps)
+    np.testing.assert_array_equal(np.asarray(g), inside.astype(np.float32))
+
+
+def test_ste_gradient_vs_finite_difference_of_surrogate(rng):
+    """The STE backward equals the finite difference of the *clip
+    surrogate* f(t) = clip(t, lo*eps, hi*eps) — the function STE
+    pretends the quantizer is. FD of the true staircase would be 0 or
+    spikes; the surrogate is what the gradient must track."""
+    eps = 0.25
+    t = np.asarray(rng.normal(size=(41,)), np.float32)
+    # keep probe points away from surrogate kinks and staircase steps
+    t = t[np.abs(np.abs(t) - 7 * eps) > 0.05]
+    g = jax.grad(
+        lambda v: jnp.sum(eps * fq.ste_quantize(v, eps, -7, 7)))(
+            jnp.asarray(t))
+    h = 1e-3
+    fd = (np.clip(t + h, -7 * eps, 7 * eps)
+          - np.clip(t - h, -7 * eps, 7 * eps)) / (2 * h)
+    np.testing.assert_allclose(np.asarray(g), fd, atol=1e-4)
+
+
+def test_ste_eps_gets_zero_gradient(rng):
+    t = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    g = jax.grad(lambda e: jnp.sum(fq.ste_quantize(t, e, -7, 7)))(
+        jnp.float32(0.1))
+    assert float(g) == 0.0
+
+
+# ------------------------------------------- grid bit-exactness ---------
+
+@pytest.mark.parametrize("bits", BITS)
+def test_weight_fake_quant_matches_deployed_grid(rng, bits):
+    """fake_quant_weight == dequantize(quantize(w, calibrate_weight(w)))
+    bit-exact — the per-tensor vision grid."""
+    w = jnp.asarray(rng.normal(size=(3, 3, 8, 16)).astype(np.float32))
+    got = fq.fake_quant_weight(w, bits)
+    spec = calibrate_weight(w, bits)
+    want = dequantize(quantize(w, spec), spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_weight_fake_quant_per_channel_matches_lm_grid(rng, bits):
+    """Per-channel fake-quant vs `quantize_dense_weights` codes, on 2-D
+    (K, N) weights (where the two absmax reductions coincide)."""
+    w = jnp.asarray(rng.normal(size=(32, 12)).astype(np.float32))
+    fq_w = fq.fake_quant_weight(w, bits, per_channel=True)
+    codes, scale = quantize_dense_weights(w, bits)
+    np.testing.assert_array_equal(
+        np.asarray(fq_w),
+        np.asarray(codes.astype(jnp.float32) * scale))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_act_fake_quant_matches_activation_spec(rng, bits):
+    """fake_quant_act lands on QuantSpec.activation's unsigned grid."""
+    beta = 1.7
+    x = jnp.asarray(rng.uniform(-0.5, 2.5, size=(128,)).astype(np.float32))
+    got = fq.fake_quant_act(x, jnp.float32(beta), bits)
+    spec = QuantSpec.activation(bits, beta)
+    want = dequantize(quantize(x, spec), spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segmented_fake_quant_is_per_run_uniform(rng):
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    runs = ((0, 5, 4), (5, 8, 2))
+    got = fq.fake_quant_weight_segmented(w, runs)
+    for s, e, b in runs:
+        np.testing.assert_array_equal(
+            np.asarray(got[..., s:e]),
+            np.asarray(fq.fake_quant_weight(w[..., s:e], b)))
+
+
+def test_weight_absmax_floor_and_stop_gradient():
+    z = jnp.zeros((4, 4))
+    assert float(fq.weight_absmax(z)) == np.float32(fq.WEIGHT_ABSMAX_FLOOR)
+    g = jax.grad(lambda w: jnp.sum(fq.fake_quant_weight(w, 8)))(
+        jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                    jnp.float32))
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_ema_update_snaps_then_blends():
+    prev = jnp.float32(0.0)
+    first = fq.ema_update(prev, jnp.float32(2.0), 0.9)
+    assert float(first) == 2.0          # zero-init snaps to observation
+    second = fq.ema_update(first, jnp.float32(1.0), 0.9)
+    np.testing.assert_allclose(float(second), 0.9 * 2.0 + 0.1 * 1.0,
+                               rtol=1e-6)
+
+
+# ------------------------------------------------ dataset hermeticity ---
+
+def test_synthetic_digits_replay_byte_identical():
+    d = SyntheticDigits(split="train", seed=3)
+    a = list(d.batches(16, 3))
+    b = list(d.batches(16, 3))       # same object, fresh generator
+    c = list(SyntheticDigits(split="train", seed=3).batches(16, 3))
+    for (xa, ya), (xb, yb), (xc, yc) in zip(a, b, c):
+        assert xa.tobytes() == xb.tobytes() == xc.tobytes()
+        assert ya.tobytes() == yb.tobytes() == yc.tobytes()
+
+
+def test_synthetic_digits_splits_and_seeds_differ():
+    base = next(SyntheticDigits(split="train", seed=0).batches(16, 1))
+    other_split = next(SyntheticDigits(split="test", seed=0).batches(16, 1))
+    other_seed = next(SyntheticDigits(split="train", seed=1).batches(16, 1))
+    assert base[0].tobytes() != other_split[0].tobytes()
+    assert base[0].tobytes() != other_seed[0].tobytes()
+
+
+def test_make_dataset_dispatch():
+    d = make_dataset("synthetic", split="train", seed=0)
+    x, y = next(d.batches(4, 1))
+    assert x.shape == (4, 16, 16, 1) and x.dtype == np.float32
+    assert y.shape == (4,) and x.min() >= 0.0 and x.max() <= 1.0
+    with pytest.raises(KeyError):
+        make_dataset("imagenet", split="train", seed=0)
+
+
+# ------------------------------------------- task-loss calibration ------
+
+def _trained_smoke(steps=60, w_bits=4):
+    cfg = get_vision_config("qat-cnn", smoke=True)
+    data = make_dataset("synthetic", split="train", seed=0)
+    qc = QATConfig(steps=steps, batch=32, w_bits=w_bits, warmup=5,
+                   log_every=max(steps // 2, 1), seed=0)
+    return cfg, data, train_qat(cfg, data, qc)
+
+
+def test_task_loss_calibration_deterministic_and_structured():
+    from repro.deploy.calibrate import calibrate_vision
+
+    cfg, data, res = _trained_smoke(steps=30)
+    xs, ys = [], []
+    for x, y in data.batches(16, 2):
+        xs.append(np.asarray(x))
+        ys.append(np.asarray(y))
+    s1, a1 = calibrate_vision(cfg, res.model_params(), xs,
+                              sensitivity="task_loss", labels=ys)
+    s2, a2 = calibrate_vision(cfg, res.model_params(), xs,
+                              sensitivity="task_loss", labels=ys)
+    assert a1 == a2
+    for p in s1:
+        assert s1[p].sq_ref == 1.0
+        for b in BITS:
+            assert s1[p].sq_err[b] == s2[p].sq_err[b]       # exact replay
+            np.testing.assert_array_equal(s1[p].col_sq_err[b],
+                                          s2[p].col_sq_err[b])
+            # group sensitivities apportion the layer sensitivity
+            np.testing.assert_allclose(float(s1[p].col_sq_err[b].sum()),
+                                       s1[p].sq_err[b], rtol=1e-6)
+    # task_loss requires labels, and rejects unknown modes
+    with pytest.raises(ValueError):
+        calibrate_vision(cfg, res.model_params(), xs,
+                         sensitivity="task_loss")
+    with pytest.raises(ValueError):
+        calibrate_vision(cfg, res.model_params(), xs, sensitivity="huh")
+
+
+# --------------------------------------------- train -> deploy loop -----
+
+def test_qat_smoke_loss_decreases_and_folds():
+    """Tier-1 gate: 60 fake-quant steps reduce the loss, the trained
+    weights fold bit-exact, and the integer path agrees with training."""
+    cfg, data, res = _trained_smoke(steps=60)
+    assert res.log[-1]["loss"] < res.log[0]["loss"]
+    fold_check(res)                                 # raises on any drift
+    qnet = deploy(res)
+    test = make_dataset("synthetic", split="test", seed=0)
+    iq = evaluate_int(qnet, test.batches(50, 2))
+    fqe = evaluate_fq(res, test.batches(50, 2))
+    assert iq["n"] == fqe["n"] == 100
+    assert abs(iq["accuracy"] - fqe["accuracy"]) <= 0.1
+
+
+def test_fold_check_rejects_float_results():
+    cfg, data, res = _trained_smoke(steps=5, w_bits=None)
+    with pytest.raises(ValueError):
+        fold_check(res)
+
+
+def test_edge_agreement_contract():
+    cfg, data, res = _trained_smoke(steps=60)
+    qnet = deploy(res)
+    x, _ = next(make_dataset("synthetic", split="test", seed=0).batches(
+        32, 1))
+    ea = edge_agreement(res, qnet, x)
+    # the honest fold contract: grids identical => codes within a couple
+    # LSBs almost everywhere (f32 vs int32 accumulation), decisions agree
+    assert ea["within_1lsb"] >= 0.9
+    assert ea["argmax_agree"] >= 0.95
+
+
+def test_planned_training_resolves_segments():
+    """A segmented PrecisionPlan reaches the fake-quant forward with the
+    deployment's own width resolution (resolve_qcfg), and the deployed
+    artifact carries the segmented conv."""
+    from repro.deploy.policy import PlanRule, PrecisionPlan
+    from repro.vision.layers import QSegmentedConv2D
+
+    # full-size net: c3's 256 channels give a CHUNK-aligned boundary
+    # (interior segment edges must sit on packing.CHUNK multiples)
+    cfg = get_vision_config("qat-cnn", smoke=False)
+    segs = ((0, packing.CHUNK, 8), (packing.CHUNK, 256, 2))
+    plan = PrecisionPlan(rules=(
+        PlanRule(pattern="c3", w_bits=8, segments=segs),
+        PlanRule(pattern="c1", w_bits=2),
+    ), default_w_bits=4)
+    lquant = resolve_layer_quant(cfg, plan, 4, 8)
+    assert lquant["c3"].segments == segs
+    assert lquant["c1"].w_bits == 2 and lquant["c2"].w_bits == 4
+
+    data = make_dataset("synthetic", split="train", seed=0)
+    qc = QATConfig(steps=10, batch=16, log_every=5, seed=0)
+    res = train_qat(cfg, data, qc, plan=plan)
+    fold_check(res)                    # segmented runs fold per-run
+    qnet = deploy(res)
+    seg_layers = [l for l in qnet.qlayers
+                  if isinstance(l[1], QSegmentedConv2D)]
+    assert len(seg_layers) == 1
+    x, _ = next(data.batches(8, 1))
+    iq = evaluate_int(qnet, [(x, np.zeros(8, np.int64))])
+    assert iq["n"] == 8
+
+
+@pytest.mark.slow
+def test_qat_beats_ptq_at_w2():
+    """The subsystem's reason to exist: at W2, fake-quant fine-tuning
+    recovers accuracy PTQ cannot (full-size net, the benchmark recipe)."""
+    cfg = get_vision_config("qat-cnn", smoke=False)
+    data = SyntheticDigits(split="train", seed=0, noise=0.45, jitter=3)
+    test = SyntheticDigits(split="test", seed=0, noise=0.45, jitter=3)
+    qc_f = QATConfig(steps=400, batch=64, w_bits=None, log_every=200,
+                     seed=0)
+    res_f = train_qat(cfg, data, qc_f)
+    ptq = evaluate_int(deploy(res_f, default_w_bits=2),
+                       test.batches(100, 5))
+    qc2 = QATConfig(steps=600, batch=64, lr=1e-2, w_bits=2, warmup=30,
+                    log_every=300, seed=0)
+    res2 = train_qat(cfg, data, qc2, init_params=res_f.params)
+    qat = evaluate_int(deploy(res2), test.batches(100, 5))
+    assert qat["accuracy"] > ptq["accuracy"] + 0.05, \
+        f"QAT {qat['accuracy']} vs PTQ {ptq['accuracy']}"
